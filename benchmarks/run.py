@@ -1,0 +1,39 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Set REPRO_FULL_BENCH=1 for
+the unscaled Table III dimensions (the default divides h/w/p by 8 so the
+whole suite finishes in minutes on this 1-core container; speedup *ratios*
+are scale-stable, see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_feature_matrix,
+        bench_quantum_sweep,
+        bench_roofline,
+        bench_segmentation,
+        bench_vmm_workloads,
+    )
+
+    sections = [
+        ("Table I  — simulator feature matrix", bench_feature_matrix.main),
+        ("Table III / §V-B — VMM workloads (riscv vs cim)", bench_vmm_workloads.main),
+        ("Fig. 4c/4d — segmentation speedups (sq vs pll)", bench_segmentation.main),
+        ("§V-C — quantum-size sweep", bench_quantum_sweep.main),
+        ("§Roofline — dry-run derived terms (40 cells)", bench_roofline.main),
+    ]
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    for title, fn in sections:
+        print(f"# === {title} ===", flush=True)
+        fn(out=print)
+    print(f"# total bench time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

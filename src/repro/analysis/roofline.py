@@ -1,0 +1,168 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms (seconds, per step), TPU v5e constants:
+
+  compute    = per-chip HLO FLOPs / peak FLOP/s          (197 TF bf16)
+  memory     = per-chip HLO bytes accessed / HBM BW      (819 GB/s)
+  collective = per-chip collective bytes / ICI link BW   (~50 GB/s/link)
+
+``cost_analysis()`` on an SPMD-partitioned module reports per-device numbers
+(verified empirically), so no further division by chip count is needed.
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO text and
+sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+_COLL_NAMES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?.*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)"
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind operand bytes + counts from (compiled) HLO text."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLL_NAMES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        result_shapes, kind, operands = m.groups()
+        if "-done(" in line:  # async pair: count the start only
+            continue
+        b = _shape_bytes(operands)
+        if b == 0:  # operand types not inlined: fall back to result shape
+            b = _shape_bytes(result_shapes)
+            if kind == "all-gather":  # result is gathered: operand = result / groupsize
+                pass  # conservative upper bound
+        out[kind]["bytes"] += b
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float  # per chip
+    bytes_accessed: float  # per chip
+    coll_bytes: float  # per chip
+    coll_detail: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self):
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self):
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "coll_detail": self.coll_detail,
+        }
+
+
+def from_compiled(compiled) -> Roofline:
+    """Loop-aware per-device cost (see hlo_cost.py): XLA's cost_analysis
+    counts scan bodies once, so we re-derive totals with trip multipliers."""
+    from repro.analysis import hlo_cost
+
+    txt = compiled.as_text()
+    c = hlo_cost.analyze(txt)
+    xla = compiled.cost_analysis()
+    detail = {k: round(v) for k, v in c.coll_by_kind.items()}
+    detail["xla_flops_no_loops"] = float(xla.get("flops", 0.0))
+    detail["xla_bytes_no_loops"] = float(xla.get("bytes accessed", 0.0))
+    return Roofline(
+        flops=float(c.flops),
+        bytes_accessed=float(c.bytes),
+        coll_bytes=float(c.coll),
+        coll_detail=detail,
+    )
+
+
+def active_params(cfg) -> int:
+    """Active parameter count per token (for MODEL_FLOPS = 6·N_active·D)."""
+    from repro.models.model import build
+
+    from repro.common import param_count
+
+    m = build(cfg)
+    total = param_count(m.specs)
+    if cfg.moe is None:
+        return total
+    # subtract inactive expert params
+    mo = cfg.moe
+    n_moe_layers = cfg.n_layers - mo.first_k_dense
+    per_expert = 3 * cfg.d_model * mo.d_ff_expert
+    total_expert = n_moe_layers * mo.n_experts * per_expert
+    active_expert = n_moe_layers * mo.top_k * per_expert
+    return total - total_expert + active_expert
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N_active·D where D = tokens processed by the step."""
+    n = active_params(cfg)
+    if kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d  # forward only
+    d = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * d

@@ -1,0 +1,151 @@
+"""Shared utilities: dtype policy, tree helpers, deterministic RNG, spec trees.
+
+Everything in the framework is pure-functional: parameters, optimizer states,
+simulation states are pytrees (nested dicts) of jnp arrays.  Alongside every
+param tree we carry a *spec tree* of identical structure whose leaves are
+``ParamSpec`` (shape, dtype, PartitionSpec) — the single source of truth used
+by init, checkpointing and the dry-run's ``in_shardings``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shape/dtype/sharding descriptor for one parameter leaf."""
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    pspec: P = P()
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float | None = None  # override fan-in scale
+
+    def shape_dtype(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_map(fn: Callable[[ParamSpec], Any], tree: Pytree) -> Pytree:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def shape_dtypes(tree: Pytree) -> Pytree:
+    """Spec tree -> ShapeDtypeStruct tree (for .lower())."""
+    return spec_map(lambda s: s.shape_dtype(), tree)
+
+
+def filter_pspec(pspec: P, mesh: Mesh) -> P:
+    """Drop axis names not present in the mesh (e.g. 'pod' on single-pod)."""
+    names = set(mesh.axis_names)
+
+    def f(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(f(e) for e in pspec))
+
+
+def shardings(tree: Pytree, mesh: Mesh) -> Pytree:
+    """Spec tree -> NamedSharding tree (for in_shardings)."""
+    return spec_map(lambda s: NamedSharding(mesh, filter_pspec(s.pspec, mesh)), tree)
+
+
+def named(mesh: Mesh, pspec: P) -> NamedSharding:
+    return NamedSharding(mesh, filter_pspec(pspec, mesh))
+
+
+def pspecs(tree: Pytree) -> Pytree:
+    return spec_map(lambda s: s.pspec, tree)
+
+
+def param_count(tree: Pytree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+def param_bytes(tree: Pytree) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(tree, is_leaf=is_spec)
+    )
+
+
+def _init_leaf(key, s: ParamSpec):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+    if s.init == "embed":
+        scale = 1.0
+    elif s.init == "small":
+        scale = 0.02
+    else:
+        scale = s.scale if s.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, s.shape, jnp.float32) * scale).astype(s.dtype)
+
+
+def init_params(key, spec_tree: Pytree) -> Pytree:
+    """Deterministically initialize a param tree from its spec tree."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(k, s) for k, s in zip(keys, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# dtype policy
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    params: Any = jnp.float32  # storage dtype of parameters
+    compute: Any = jnp.bfloat16  # matmul dtype
+    accum: Any = jnp.float32  # softmax / reductions / loss
+
+
+def cast_compute(policy: DTypePolicy, tree: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda x: x.astype(policy.compute) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# misc
+
+
+def pad_to(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def with_sharding(x, mesh: Mesh | None, pspec: P):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, filter_pspec(pspec, mesh)))
+
+
+def take_layer(stacked: Pytree, i):
+    """Index layer i out of a (L, ...)-stacked param tree."""
+    return jax.tree.map(lambda x: x[i], stacked)

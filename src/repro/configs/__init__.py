@@ -1,0 +1,27 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    all_cells,
+    cells,
+    get_config,
+    get_smoke_config,
+    skipped_cells,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "all_cells",
+    "cells",
+    "get_config",
+    "get_smoke_config",
+    "skipped_cells",
+]

@@ -1,0 +1,162 @@
+"""Latency-annotated inter-segment channels (paper §IV-B).
+
+Messages are TLM transactions crossing a segment boundary.  A message sent
+at local time ``t`` over a channel with latency ``L`` becomes *visible* to
+the receiver at ``t_avail = t + L``; the controller guarantees no receiver's
+local time ever exceeds ``min_peers(t_peer + L)``, so a message can never
+arrive in the receiver's past — the paper's time-decoupling legality rule,
+property-tested in tests/test_core_decoupling.py.
+
+Buffers are fixed-capacity structure-of-arrays so the whole simulation stays
+jit/vmap/shard_map-friendly.  Routing is a pure function of the stacked
+outboxes — in the shard_map backend it lowers to an all-gather over the
+``segment`` mesh axis (the TPU analogue of the paper's shared-memory channel
+objects).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# message kinds
+MSG_W_DRAM = 0  # posted write to the DRAM-owning segment
+MSG_W_CIM = 1  # CIM register write; addr = slot << 16 | reg_offset
+MSG_W_SCRATCH = 2  # DMA write into a segment's scratch SRAM
+MSG_R_DRAM = 3  # blocking read request; data = requesting cpu tag
+MSG_R_RESP = 4  # read response; addr = tag
+
+FIELDS = ("kind", "dst", "addr", "data", "t_emit")
+
+
+def empty_box(cap: int):
+    box = {f: jnp.zeros((cap,), jnp.int32) for f in FIELDS}
+    box["valid"] = jnp.zeros((cap,), jnp.bool_)
+    box["count"] = jnp.zeros((), jnp.int32)
+    return box
+
+
+def box_append(box, mask, kind, dst, addr, data, t_emit):
+    """Append one message (if mask) at the current count.
+
+    Masked appends scatter out-of-bounds and are dropped — never write a
+    dead slot with stale values (duplicate scatter indices with different
+    values are nondeterministic in XLA)."""
+    cap = box["valid"].shape[0]
+    i = jnp.where(mask, jnp.clip(box["count"], 0, cap - 1), cap)
+    sel = lambda f, v: box[f].at[i].set(jnp.asarray(v, jnp.int32), mode="drop")
+    out = dict(box)
+    out["kind"] = sel("kind", kind)
+    out["dst"] = sel("dst", dst)
+    out["addr"] = sel("addr", addr)
+    out["data"] = sel("data", data)
+    out["t_emit"] = sel("t_emit", t_emit)
+    out["valid"] = box["valid"].at[i].set(True, mode="drop")
+    out["count"] = box["count"] + mask.astype(jnp.int32)
+    return out
+
+
+def box_append_bulk(box, mask, kind, dst, addr, data, t_emit):
+    """Append a vector of messages (mask selects which) preserving order."""
+    cap = box["valid"].shape[0]
+    n = mask.shape[0]
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    pos = jnp.where(mask, jnp.clip(box["count"] + rank, 0, cap - 1), cap)
+
+    def sc(dest, vals):
+        return dest.at[pos].set(vals.astype(jnp.int32), mode="drop")
+
+    out = dict(box)
+    out["kind"] = sc(box["kind"], jnp.broadcast_to(jnp.asarray(kind, jnp.int32), (n,)))
+    out["dst"] = sc(box["dst"], jnp.broadcast_to(jnp.asarray(dst, jnp.int32), (n,)))
+    out["addr"] = sc(box["addr"], jnp.broadcast_to(jnp.asarray(addr, jnp.int32), (n,)))
+    out["data"] = sc(box["data"], jnp.broadcast_to(jnp.asarray(data, jnp.int32), (n,)))
+    out["t_emit"] = sc(box["t_emit"], jnp.broadcast_to(jnp.asarray(t_emit, jnp.int32), (n,)))
+    out["valid"] = box["valid"].at[pos].set(True, mode="drop")
+    out["count"] = box["count"] + mask.sum().astype(jnp.int32)
+    return out
+
+
+def pack(box):
+    """Compact valid entries to the front (stable)."""
+    cap = box["valid"].shape[0]
+    v = box["valid"]
+    rank = jnp.cumsum(v.astype(jnp.int32)) - 1
+    pos = jnp.where(v, jnp.clip(rank, 0, cap - 1), cap)
+    out = {}
+    for f in FIELDS:
+        buf = jnp.zeros((cap,), jnp.int32)
+        out[f] = buf.at[pos].set(box[f], mode="drop")
+    vb = jnp.zeros((cap,), jnp.bool_)
+    out["valid"] = vb.at[pos].set(True, mode="drop")
+    out["count"] = v.sum().astype(jnp.int32)
+    return out
+
+
+def route(outboxes, latency, in_cap: int):
+    """Stacked outboxes (S, cap) -> stacked fresh inboxes (S, in_cap).
+
+    ``latency[src, dst]`` (int32 matrix) is added to each message's
+    ``t_emit`` to form ``t_avail``.  Pure function — identical under every
+    backend; the shard_map backend all-gathers the outboxes first.
+    """
+    s, cap = outboxes["valid"].shape
+    src_ids = jnp.broadcast_to(jnp.arange(s)[:, None], (s, cap)).reshape(-1)
+    flat = {f: outboxes[f].reshape(-1) for f in FIELDS}
+    valid = outboxes["valid"].reshape(-1)
+    dst = flat["dst"]
+    t_avail = flat["t_emit"] + latency[src_ids, jnp.clip(dst, 0, s - 1)]
+
+    def one_dst(d):
+        m = valid & (dst == d)
+        rank = jnp.cumsum(m.astype(jnp.int32)) - 1
+        pos = jnp.where(m, jnp.clip(rank, 0, in_cap - 1), in_cap)
+        box = {}
+        for f in ("kind", "addr", "data"):
+            buf = jnp.zeros((in_cap,), jnp.int32)
+            box[f] = buf.at[pos].set(flat[f], mode="drop")
+        ta = jnp.zeros((in_cap,), jnp.int32)
+        box["t_avail"] = ta.at[pos].set(t_avail, mode="drop")
+        vb = jnp.zeros((in_cap,), jnp.bool_)
+        box["valid"] = vb.at[pos].set(m, mode="drop")
+        box["count"] = m.sum().astype(jnp.int32)
+        return box
+
+    return jax.vmap(one_dst)(jnp.arange(s))
+
+
+def merge_pending(pending, fresh):
+    """Append fresh inbox messages after the surviving pending ones."""
+    cap = pending["valid"].shape[0]
+    packed = pack_pending(pending)
+    base = packed["count"]
+    n = fresh["valid"].shape[0]
+    m = fresh["valid"]
+    pos = jnp.where(m, jnp.clip(base + jnp.arange(n), 0, cap - 1), cap)
+    out = dict(packed)
+    for f in ("kind", "addr", "data", "t_avail"):
+        out[f] = packed[f].at[pos].set(fresh[f], mode="drop")
+    out["valid"] = packed["valid"].at[pos].set(True, mode="drop")
+    out["count"] = base + m.sum().astype(jnp.int32)
+    return out
+
+
+def empty_pending(cap: int):
+    box = {f: jnp.zeros((cap,), jnp.int32) for f in ("kind", "addr", "data", "t_avail")}
+    box["valid"] = jnp.zeros((cap,), jnp.bool_)
+    box["count"] = jnp.zeros((), jnp.int32)
+    return box
+
+
+def pack_pending(box):
+    cap = box["valid"].shape[0]
+    v = box["valid"]
+    rank = jnp.cumsum(v.astype(jnp.int32)) - 1
+    pos = jnp.where(v, jnp.clip(rank, 0, cap - 1), cap)
+    out = {}
+    for f in ("kind", "addr", "data", "t_avail"):
+        buf = jnp.zeros((cap,), jnp.int32)
+        out[f] = buf.at[pos].set(box[f], mode="drop")
+    vb = jnp.zeros((cap,), jnp.bool_)
+    out["valid"] = vb.at[pos].set(True, mode="drop")
+    out["count"] = v.sum().astype(jnp.int32)
+    return out

@@ -1,0 +1,200 @@
+"""VP segmentation strategies (paper §IV-C, Fig. 4a/4b) + platform builder.
+
+A segmentation is a list of segment descriptors; the builder wires global
+CIM ids to (segment, slot), assigns manager CPUs + scratch mailboxes,
+preloads crossbar weights / DRAM contents / programs, and returns a stacked
+state ready for the Controller.
+
+Strategies:
+  uniform        — every CPU segment gets an equal share of CIM-Units
+                   (Fig. 4a: 2 segments × {1 CPU, 2 CIM}); DRAM in segment 0
+  load_oriented  — one CPU manages all CIM-Units, the other is free; CIMs
+                   live in their own segments (Fig. 4b: seg0 {CPU0, DRAM},
+                   seg1 {CPU1}, seg2 {2 CIM}, seg3 {2 CIM})
+  auto           — greedy balanced partition over per-module cost estimates
+                   (the paper's "future work", implemented here)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as ch
+from repro.vp import isa, platform as pf
+from repro.vp.assembler import assemble
+
+# scratch mailbox layout (word offsets)
+FLAG0, FLAG1 = 0, 1
+OUT0, OUT1 = 256, 512
+B_STAGE = 1024  # staged input vectors for offload mode
+
+
+@dataclasses.dataclass
+class SegmentDesc:
+    cpu: bool = False
+    dram: bool = False
+    n_cims: int = 0
+    cim_mgr: int = -1  # segment id of the managing CPU
+
+
+def uniform(n_cpus: int = 2, cims_per_cpu: int = 2):
+    return [
+        SegmentDesc(cpu=True, dram=(i == 0), n_cims=cims_per_cpu, cim_mgr=i)
+        for i in range(n_cpus)
+    ]
+
+
+def load_oriented():
+    return [
+        SegmentDesc(cpu=True, dram=True),
+        SegmentDesc(cpu=True),
+        SegmentDesc(n_cims=2, cim_mgr=1),
+        SegmentDesc(n_cims=2, cim_mgr=1),
+    ]
+
+
+def auto_segmentation(module_costs: dict, n_segments: int):
+    """Greedy longest-processing-time partition of modules onto segments.
+
+    module_costs: {"cpu0": c, "cpu1": c, "dram": c, "cim0": c, ...} — host
+    cost estimates (e.g. measured per-module event rates).  Returns segment
+    descriptors with balanced total cost.  CPUs anchor segments; DRAM joins
+    the heaviest-CPU segment's complement; CIMs fill greedily.
+    """
+    cpus = sorted([k for k in module_costs if k.startswith("cpu")])
+    cims = sorted(
+        [k for k in module_costs if k.startswith("cim")],
+        key=lambda k: -module_costs[k],
+    )
+    n_segments = max(n_segments, len(cpus))
+    descs = [SegmentDesc() for _ in range(n_segments)]
+    loads = np.zeros(n_segments)
+    for i, c in enumerate(cpus):
+        descs[i].cpu = True
+        descs[i].cim_mgr = i
+        loads[i] += module_costs[c]
+    # DRAM joins the lightest CPU segment
+    d = int(np.argmin(loads[: len(cpus)]))
+    descs[d].dram = True
+    loads[d] += module_costs.get("dram", 0.0)
+    mgr = int(np.argmax(loads[: len(cpus)]))  # heaviest CPU manages offload
+    for c in cims:
+        s = int(np.argmin(loads))
+        descs[s].n_cims += 1
+        if descs[s].cim_mgr < 0:
+            descs[s].cim_mgr = mgr
+        loads[s] += module_costs[c]
+    return [d for d in descs if d.cpu or d.dram or d.n_cims]
+
+
+def build(descs, *, programs=None, dram_words=None, crossbars=None,
+          scratch_init=None, channel_latency: int = 10_000, use_kernel: bool = False):
+    """Assemble the stacked simulation state.
+
+    programs: {seg_id: asm_source or np.uint32 array}
+    dram_words: np.int32 array preloaded at address 0
+    crossbars: {global_cim_id: np.int8 (R, C)} preloaded weights
+    scratch_init: {seg_id: {word_offset: np.int32 array}}
+    """
+    n = len(descs)
+    cim_seg, cim_slot, mgr_of = [], [], []
+    for s, d in enumerate(descs):
+        for k in range(d.n_cims):
+            cim_seg.append(s)
+            cim_slot.append(k)
+            mgr_of.append(d.cim_mgr if d.cim_mgr >= 0 else s)
+    cfg = pf.VPConfig(
+        n_segments=n,
+        dram_segment=[i for i, d in enumerate(descs) if d.dram][0] if any(d.dram for d in descs) else 0,
+        channel_latency=channel_latency,
+        cim_seg=tuple(cim_seg),
+        cim_slot=tuple(cim_slot),
+        use_kernel=use_kernel,
+    )
+    states = []
+    for s, d in enumerate(descs):
+        st = pf.segment_state(cfg)
+        st["seg_id"] = jnp.asarray(s, jnp.int32)
+        st["cpu"] = dict(st["cpu"])
+        st["cpu"]["present"] = jnp.asarray(d.cpu)
+        st["dram_present"] = jnp.asarray(d.dram)
+        cims = dict(st["cims"])
+        pres = np.zeros(cfg.n_cim_slots, bool)
+        pres[: d.n_cims] = True
+        cims["present"] = jnp.asarray(pres)
+        states.append({**st, "cims": cims})
+
+    # wire each global CIM's manager mailbox: unit g managed by CPU seg m
+    # gets flag FLAG{idx}, out OUT{idx} where idx = per-manager ordinal
+    per_mgr_count: dict[int, int] = {}
+    for g, (s, k) in enumerate(zip(cim_seg, cim_slot)):
+        m = mgr_of[g]
+        idx = per_mgr_count.get(m, 0)
+        per_mgr_count[m] = idx + 1
+        cims = dict(states[s]["cims"])
+        cims["mgr_seg"] = cims["mgr_seg"].at[k].set(m)
+        cims["flag_addr"] = cims["flag_addr"].at[k].set(FLAG0 + idx)
+        cims["out_addr"] = cims["out_addr"].at[k].set(OUT0 + idx * 256)
+        if crossbars and g in crossbars:
+            w = np.zeros((256, 256), np.int8)
+            src = np.asarray(crossbars[g], np.int8)
+            w[: src.shape[0], : src.shape[1]] = src
+            cims["weights"] = cims["weights"].at[k].set(jnp.asarray(w))
+        states[s]["cims"] = cims
+
+    if dram_words is not None:
+        ds = cfg.dram_segment
+        dram = dict(states[ds]["dram"])
+        w = np.zeros(pf.DRAM_BACKING, np.int32)
+        w[: len(dram_words)] = dram_words
+        dram["data"] = jnp.asarray(w)
+        states[ds]["dram"] = dram
+
+    for s, prog in (programs or {}).items():
+        words = assemble(prog) if isinstance(prog, str) else prog
+        buf = np.zeros(pf.PROG_WORDS, np.uint32)
+        buf[: len(words)] = words
+        states[s]["prog"] = jnp.asarray(buf)
+    # CPUs without a program halt immediately (otherwise they spin on
+    # zero-words forever and the simulation never reports completion)
+    for s, d in enumerate(descs):
+        if d.cpu and s not in (programs or {}):
+            cpu = dict(states[s]["cpu"])
+            cpu["halted"] = jnp.asarray(True)
+            states[s]["cpu"] = cpu
+
+    for s, inits in (scratch_init or {}).items():
+        sc = np.zeros(pf.SCRATCH_WORDS, np.int32)
+        for off, arr in inits.items():
+            sc[off : off + len(arr)] = arr
+        states[s]["scratch"] = jnp.asarray(sc)
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    pending = jax.vmap(lambda _: ch.empty_pending(pf.IN_CAP))(jnp.arange(n))
+    return cfg, stacked, pending
+
+
+def cim_global_base(g: int) -> int:
+    return isa.CIM_BASE + g * isa.CIM_STRIDE
+
+
+def mailbox_ordinals(descs) -> dict[int, int]:
+    """global cim id -> mailbox ordinal within its manager CPU's scratch.
+
+    Mirrors build()'s assignment (global-id order within each manager);
+    programs MUST use these ordinals for flag/output addresses — e.g. under
+    load-oriented segmentation one CPU manages all four units, so a program
+    driving units (0, 2) polls flags 0 and 2, not 0 and 1."""
+    mgr_of = []
+    for s, d in enumerate(descs):
+        for _ in range(d.n_cims):
+            mgr_of.append(d.cim_mgr if d.cim_mgr >= 0 else s)
+    per_mgr: dict[int, int] = {}
+    out = {}
+    for g, m in enumerate(mgr_of):
+        out[g] = per_mgr.get(m, 0)
+        per_mgr[m] = out[g] + 1
+    return out

@@ -1,0 +1,32 @@
+"""Jit'd public wrappers for the crossbar VMM kernel.
+
+``interpret=True`` on this CPU container (kernel body executed by the Pallas
+interpreter, semantics identical); on a real TPU deployment flip the flag.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crossbar_vmm.kernel import crossbar_vmm_tiles
+
+INTERPRET = True  # CPU container: no TPU lowering available
+
+
+def crossbar_vmm(weights, x, in_res: int = 8, out_res: int = 8):
+    """weights int8 (R, C); x int32 (C,) -> int32 (R,)."""
+    return crossbar_vmm_tiles(x[None, :], weights, in_res, out_res, interpret=INTERPRET)[0]
+
+
+def crossbar_vmm_batch(weights, x, in_res: int = 8, out_res: int = 8):
+    """Batched over units: weights (U, R, C) int8; x (U, C) int32 -> (U, R).
+
+    Used by the CIM quantum-boundary completion (vp/cim.py) when the
+    platform is built with ``use_kernel=True``.
+    """
+    return jax.vmap(lambda w, v: crossbar_vmm(w, v, in_res, out_res))(weights, x)
+
+
+def crossbar_matmul(weights, x, in_res: int = 8, out_res: int = 8):
+    """weights (R, C) int8, x (C, N) int32 -> (R, N) — tiled GEMM form."""
+    return crossbar_vmm_tiles(x.T, weights, in_res, out_res, interpret=INTERPRET).T

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the bit-sliced crossbar VMM.
+
+Semantics (paper Fig. 1b/1c, CIM-Unit calculator):
+  1. DAC: clamp the input vector to ``in_res`` signed bits, then split it
+     into ``in_res``-worth of bit-serial slices (sign-magnitude: the sign is
+     applied after magnitude accumulation, matching differential crossbar
+     pairs);
+  2. crossbar MAC: each slice drives the memristor array -> int matvec
+     against int8 conductances;
+  3. S+H / shift-add: partial results accumulate weighted by 2^k;
+  4. ADC: saturate to ``out_res`` signed bits + log2(C) accumulation
+     headroom (fixed full-scale).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_dac(x, in_res: int):
+    lo = -(1 << (in_res - 1))
+    hi = (1 << (in_res - 1)) - 1
+    return jnp.clip(x, lo, hi)
+
+
+def bit_slices(mag, in_res: int):
+    """Unsigned magnitude -> list of 0/1 planes, LSB first."""
+    return [((mag >> k) & 1) for k in range(in_res)]
+
+
+def adc_saturate(acc, out_res: int, headroom_bits: int = 8):
+    hi = (1 << (out_res - 1 + headroom_bits)) - 1
+    return jnp.clip(acc, -hi - 1, hi)
+
+
+def crossbar_vmm(weights, x, in_res: int = 8, out_res: int = 8):
+    """weights int8 (R, C); x int32 (C,) -> int32 (R,).
+
+    Bit-exact model of the analog pipeline: identical result to
+    ``clip(W @ clip(x))`` because the bit-serial accumulation is exact —
+    the decomposition is still modeled explicitly so the kernel and the
+    oracle share structure (and tests can probe per-slice equivalence).
+    """
+    xq = quantize_dac(x, in_res)
+    sign = jnp.sign(xq).astype(jnp.int32)
+    mag = jnp.abs(xq).astype(jnp.int32)
+    w = weights.astype(jnp.int32)
+    acc = jnp.zeros((weights.shape[0],), jnp.int32)
+    for k, plane in enumerate(bit_slices(mag, in_res)):
+        acc = acc + ((w @ (plane * sign)) << k)
+    return adc_saturate(acc, out_res)
+
+
+def crossbar_vmm_batch(weights, x, in_res: int = 8, out_res: int = 8):
+    """weights (U, R, C) int8; x (U, C) int32 -> (U, R) int32."""
+    return jax.vmap(lambda w, v: crossbar_vmm(w, v, in_res, out_res))(weights, x)
+
+
+def crossbar_matmul(weights, x, in_res: int = 8, out_res: int = 8):
+    """Tiled matrix version: weights (R, C) int8, x (C, N) int32 -> (R, N)."""
+    return jax.vmap(lambda col: crossbar_vmm(weights, col, in_res, out_res), in_axes=1, out_axes=1)(x)

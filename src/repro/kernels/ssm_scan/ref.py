@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the selective-scan (Mamba-1) recurrence.
+
+  h_t = da_t * h_{t-1} + dbx_t          (elementwise over (D, N))
+  y_t = sum_n h_t[d, n] * c_t[n]
+
+Shapes: da, dbx (B, S, D, N); c (B, S, N); h0 (B, D, N) -> y (B, S, D), h_S.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan(da, dbx, c, h0):
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbx, 1, 0), jnp.moveaxis(c, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

@@ -1,0 +1,113 @@
+"""End-to-end training driver.
+
+Runs any ``--arch`` (full or ``--smoke`` reduced config, optionally scaled
+with --layers/--d-model) with AdamW, microbatching, checkpoints and
+auto-resume.  On this CPU container the smoke configs train in seconds; the
+full configs are exercised through the dry-run (launch/dryrun.py).
+
+Fault tolerance demo: ``--fail-at-step N`` hard-exits mid-run; re-invoking
+with the same --ckpt-dir resumes from the newest *valid* checkpoint (atomic
+writes + checksums; see train/checkpoint.py).
+
+XLA flags for a real TPU deployment (latency-hiding overlap of the DP
+collectives with backward compute) are listed in README §Deployment:
+  --xla_tpu_enable_async_collective_fusion=true
+  --xla_tpu_overlap_compute_collective_tc=true
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import build
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, batch_at
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import make_train_step, state_specs
+from repro.common import init_params, shape_dtypes
+
+
+def extras_for(cfg, batch, seq):
+    out = {}
+    if cfg.family == "vlm":
+        out["vision_embeds"] = jnp.zeros((batch, min(cfg.n_vision_tokens, seq // 2), cfg.d_model), jnp.bfloat16)
+        out["mrope_pos"] = jnp.tile(jnp.arange(seq, dtype=jnp.int32)[None, None], (3, batch, 1))
+    if cfg.family == "encdec":
+        out["enc_feats"] = jnp.zeros((batch, seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--layers", type=int, default=0, help="override depth")
+    ap.add_argument("--d-model", type=int, default=0, help="override width")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at-step", type=int, default=0, help="failure injection")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    over = {}
+    if args.layers:
+        over["n_layers"] = args.layers
+    if args.d_model:
+        over["d_model"] = args.d_model
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    model = build(cfg, tp=1)
+    oc = OptConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps,
+                   moments_dtype=cfg.moments_dtype)
+    sspecs = state_specs(model, oc)
+    from repro.common import param_count
+
+    print(f"arch={cfg.name}  params={param_count(model.specs)/1e6:.1f}M  "
+          f"steps={args.steps}  batch={args.batch}x{args.seq}")
+
+    start_step = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        state, start_step = ckpt.restore(args.ckpt_dir, shape_dtypes(sspecs))
+        print(f"resumed from checkpoint step {start_step}")
+    else:
+        state = {"params": model.init(jax.random.PRNGKey(0)),
+                 "opt": init_params(jax.random.PRNGKey(1), sspecs["opt"])}
+
+    step_fn = jax.jit(make_train_step(model, oc, accum_steps=args.accum), donate_argnums=(0,))
+    dc = DataConfig(cfg.vocab_size, args.seq, args.batch, seed=7)
+    ex = extras_for(cfg, args.batch, args.seq)
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {**batch_at(dc, step), **ex}
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % args.log_every == 0 or step == start_step:
+            loss = float(metrics["loss"])
+            tput = args.batch * args.seq * (step + 1 - start_step) / max(time.time() - t0, 1e-9)
+            print(f"step {step+1:5d}  loss {loss:7.4f}  grad_norm {float(metrics['grad_norm']):8.3f}  tok/s {tput:9.0f}")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, state, async_write=False)
+        if args.fail_at_step and step + 1 == args.fail_at_step:
+            print(f"INJECTED FAILURE at step {step+1} (resume with the same --ckpt-dir)")
+            sys.exit(17)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, state)
+    print("training complete")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the brief: ``input_specs()`` supplies
+precomputed frame embeddings ``enc_feats (B, S_enc, d_model)``.  The encoder
+adds fixed sinusoidal positions and runs bidirectional attention; the decoder
+uses learned positions, causal self-attention and cross-attention to the
+encoded memory.  Cross K/V are computed once (at prefill) and cached.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common import ParamSpec, with_sharding
+from repro.models import layers as L
+from repro.models.transformer import stack_specs
+
+MAX_DEC_POS = 32768  # decode_32k needs 32k learned decoder positions
+
+
+def _enc_layer_specs(cfg, tp):
+    return {
+        "ln1": L.norm_specs(cfg),
+        "attn": L.attn_specs(cfg, tp),
+        "ln2": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg, tp),
+    }
+
+
+def _dec_layer_specs(cfg, tp):
+    return {
+        "ln1": L.norm_specs(cfg),
+        "attn": L.attn_specs(cfg, tp),
+        "ln_x": L.norm_specs(cfg),
+        "xattn": L.attn_specs(cfg, tp),
+        "ln2": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg, tp),
+    }
+
+
+def encdec_specs(cfg, tp: int = 16, fsdp: bool = False):
+    return {
+        "embed": L.embed_specs(cfg, tp),
+        "dec_pos": ParamSpec((MAX_DEC_POS, cfg.d_model), cfg.params_dtype, P(), init="small"),
+        "enc_layers": stack_specs(_enc_layer_specs(cfg, tp), cfg.n_enc_layers),
+        "enc_norm": L.norm_specs(cfg),
+        "dec_layers": stack_specs(_dec_layer_specs(cfg, tp), cfg.n_layers),
+        "final_norm": L.norm_specs(cfg),
+    }
+
+
+def _bidir_attn(cfg, p, x, policy, x_kv=None):
+    q, k, v = L.qkv_project(cfg, p, x, policy, angles=None, x_kv=x_kv)
+    o = L.dense_attention(
+        q, L.expand_kv(k, cfg.n_heads), L.expand_kv(v, cfg.n_heads), causal=False
+    )
+    return L.attn_out(p, o, policy)
+
+
+def encode(cfg, params, enc_feats, policy, mesh=None):
+    """enc_feats (B, S_enc, d) -> memory (B, S_enc, d).
+
+    With head counts below the TP degree (whisper: 6 < 16), the encoder is
+    sequence-sharded over 'model' instead: the bidirectional attention
+    contracts across the sharded axis (GSPMD inserts the partial-softmax
+    collectives) and the 32k×32k score matrices split 16 ways.
+    """
+    seq_ax = "model" if (cfg.n_heads % 16 and enc_feats.shape[1] % 16 == 0) else None
+    h = enc_feats.astype(policy.compute)
+    h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model).astype(h.dtype)[None]
+    h = with_sharding(h, mesh, P(L.DATA_AXES, seq_ax, None))
+
+    def body(x, lp):
+        a = _bidir_attn(cfg, lp["attn"], L.apply_norm(cfg, lp["ln1"], x), policy)
+        x = x + a
+        x = x + L.apply_mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], x), policy)
+        return with_sharding(x, mesh, P(L.DATA_AXES, seq_ax, None)), None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return L.apply_norm(cfg, params["enc_norm"], h)
+
+
+def cross_kv(cfg, params, memory, policy):
+    """Precompute per-decoder-layer cross K/V from the encoder memory.
+
+    Returns (k, v) stacked (L_dec, B, S_enc, Hkv, Dh) — part of the cache.
+    """
+    cdt = policy.compute
+
+    def body(_, lp):
+        k = jnp.einsum("bsd,dhk->bshk", memory.astype(cdt), lp["xattn"]["wk"].astype(cdt))
+        v = jnp.einsum("bsd,dhk->bshk", memory.astype(cdt), lp["xattn"]["wv"].astype(cdt))
+        return None, (k, v)
+
+    _, kv = jax.lax.scan(body, None, params["dec_layers"])
+    return kv
+
+
+def _dec_layer(cfg, lp, x, policy, *, mode, cache, xkv, pos):
+    from repro.models.transformer import attn_apply, _grouped_decode_attention
+
+    a, self_c = attn_apply(
+        cfg, lp, L.apply_norm(cfg, lp["ln1"], x), policy,
+        mode=mode, angles=None, cache=cache, pos=pos,
+    )
+    x = x + a
+    # cross attention against fixed memory K/V
+    xq = L.apply_norm(cfg, lp["ln_x"], x)
+    q = jnp.einsum(
+        "bsd,dhk->bshk", xq.astype(policy.compute), lp["xattn"]["wq"].astype(policy.compute)
+    )
+    xk, xv = xkv
+    if q.shape[1] == 1:
+        o = _grouped_decode_attention(q, xk, xv, xk.shape[1])
+    else:
+        o = L.dense_attention(
+            q, L.expand_kv(xk, cfg.n_heads), L.expand_kv(xv, cfg.n_heads), causal=False
+        )
+    x = x + L.attn_out(lp["xattn"], o, policy)
+    x = x + L.apply_mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], x), policy)
+    return x, self_c
+
+
+def decode_forward(cfg, params, tokens, policy, *, mode, cache=None, xkv=None, pos=0, mesh=None):
+    """Decoder stack. tokens (B, S_dec); mode train|prefill|decode.
+
+    cache: stacked self-attn (k, v) for decode; xkv: stacked cross (k, v).
+    """
+    b, s = tokens.shape
+    h = L.embed(params["embed"], tokens, policy) * math.sqrt(cfg.d_model)
+    start = pos if mode == "decode" else 0
+    h = h + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], start, s, axis=0
+    ).astype(h.dtype)[None]
+    h = with_sharding(h, mesh, P(L.DATA_AXES, None, None))
+
+    def body(x, xs):
+        lp, c, kv = xs
+        x, c_out = _dec_layer(cfg, lp, x, policy, mode=mode, cache=c, xkv=kv, pos=pos)
+        return with_sharding(x, mesh, P(L.DATA_AXES, None, None)), c_out
+
+    h, c_out = jax.lax.scan(body, h, (params["dec_layers"], cache, xkv))
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return h, (c_out if mode != "train" else None)
+
+
+def encdec_loss_forward(cfg, params, batch, policy, mesh=None):
+    """Training forward: returns final decoder hidden states."""
+    memory = encode(cfg, params, batch["enc_feats"], policy, mesh=mesh)
+    xkv = cross_kv(cfg, params, memory, policy)
+    h, _ = decode_forward(
+        cfg, params, batch["tokens"], policy, mode="train", cache=None, xkv=xkv, mesh=mesh
+    )
+    return h

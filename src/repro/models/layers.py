@@ -1,0 +1,458 @@
+"""Core model building blocks: norms, RoPE/M-RoPE, GQA attention, MLP, embeddings.
+
+Conventions
+-----------
+- params are nested dicts; each module has ``<module>_specs(cfg, tp)`` returning a
+  ``ParamSpec`` tree (shape/dtype/PartitionSpec) and ``<module>(params, ...)`` apply fns.
+- activations: (batch, seq, d_model); attention heads live in (B, S, H, Dh).
+- ``tp`` is the model-axis size used to *decide* sharding (divisibility policy);
+  PartitionSpecs always name the ``model`` axis — on a 1-device test mesh they
+  are simply inert.
+- matmuls run in ``policy.compute`` (bf16); softmax/reductions in fp32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common import DTypePolicy, ParamSpec
+
+DATA_AXES = ("data", "pod")  # batch shards over both; 'pod' absent on 1-pod meshes
+# (data-major order matches the device order shard_map's manual mode expects
+#  on the (pod, data, model) mesh — pod-major triggers an SPMD full-remat)
+
+
+def batch_pspec(*rest):
+    return P(DATA_AXES, *rest)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def norm_specs(cfg, d=None):
+    d = d or cfg.d_model
+    s = {"scale": ParamSpec((d,), jnp.float32, P(), init="ones")}
+    if cfg.norm == "layernorm":
+        s["bias"] = ParamSpec((d,), jnp.float32, P(), init="zeros")
+    return s
+
+
+def apply_norm(cfg, p, x, eps=1e-5):
+    if getattr(cfg, "fast_norm", False) and cfg.norm == "rmsnorm":
+        # §Perf: stats in fp32, normalization multiply in bf16 — the fp32
+        # activation-sized fusion chains around every norm dominate the
+        # memory roofline term once attention scores are streamed (flash)
+        var = (x.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * p["scale"].astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        xf = xf - xf.mean(-1, keepdims=True)
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    if cfg.norm == "layernorm":
+        y = y + p["bias"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps=1e-6):
+    """qk-norm: RMS-normalize the last (head) dim."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_angles(positions, head_dim, theta):
+    """positions (..., S) int -> angles (..., S, head_dim//2) fp32."""
+    half = head_dim // 2
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def mrope_angles(positions3, head_dim, theta, sections):
+    """M-RoPE (Qwen2-VL): positions3 (3, B, S); sections split head_dim//2."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions3[..., None].astype(jnp.float32) * inv  # (3, B, S, half)
+    parts, off = [], 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, ..., off : off + sec])
+        off += sec
+    return jnp.concatenate(parts, axis=-1)  # (B, S, half)
+
+
+def apply_rope(x, angles):
+    """x (B, S, H, Dh); angles (B, S, Dh//2). Half-split (NeoX) convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_positions(seq, d_model):
+    """Whisper-style fixed sinusoidal embeddings (seq, d_model)."""
+    half = d_model // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def padded_heads(cfg, tp: int) -> int:
+    """Q heads padded up to a TP multiple so attention always shards.
+
+    §Perf (llama4: 40 heads on TP=16): non-divisible head counts previously
+    fell back to *replicated* attention — 16× wasted compute, catastrophic at
+    32k ctx (useful-FLOP ratio 0.12).  Padding to 48 costs 20% extra head
+    compute but shards 16-way; pad heads are masked out after attention
+    (zero contribution regardless of init), preserving the architecture.
+    Padding only engages when it pays: pad/real ≤ 1.5 (whisper's 6 heads on
+    TP=16 would pad 2.7× — it stays replicated instead).
+    """
+    hq = cfg.n_heads
+    if hq % tp == 0:
+        return hq
+    pad = -(-hq // tp) * tp
+    return pad if pad <= hq * 1.5 and pad % cfg.n_kv_heads == 0 else hq
+
+
+def attn_specs(cfg, tp: int, dtype=None):
+    """QKV/out projections. Heads shard over 'model' (padded if needed)."""
+    dtype = dtype or cfg.params_dtype
+    d, hkv, dh = cfg.d_model, cfg.n_kv_heads, cfg.head_dim
+    hq = padded_heads(cfg, tp)
+    hq_ax = "model" if hq % tp == 0 else None
+    hkv_ax = "model" if hkv % tp == 0 else None
+    s = {
+        "wq": ParamSpec((d, hq, dh), dtype, P(None, hq_ax, None)),
+        "wk": ParamSpec((d, hkv, dh), dtype, P(None, hkv_ax, None)),
+        "wv": ParamSpec((d, hkv, dh), dtype, P(None, hkv_ax, None)),
+        "wo": ParamSpec((hq, dh, d), dtype, P(hq_ax, None, None)),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((dh,), jnp.float32, P(), init="ones")
+        s["k_norm"] = ParamSpec((dh,), jnp.float32, P(), init="ones")
+    return s
+
+
+def mask_pad_heads(cfg, o):
+    """Zero the padded heads' attention output (B, S, Hpad, Dh)."""
+    hpad = o.shape[2]
+    if hpad == cfg.n_heads:
+        return o
+    mask = (jnp.arange(hpad) < cfg.n_heads).astype(o.dtype)
+    return o * mask[None, None, :, None]
+
+
+def qkv_project(cfg, p, x, policy: DTypePolicy, angles=None, x_kv=None):
+    """Returns q (B,Sq,Hq,Dh), k/v (B,Skv,Hq,Dh) — kv already expanded to Hq heads."""
+    cdt = policy.compute
+    xq = x.astype(cdt)
+    xkv = (x if x_kv is None else x_kv).astype(cdt)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(cdt))
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    if angles is not None:
+        q_ang, k_ang = angles if isinstance(angles, tuple) else (angles, angles)
+        q = apply_rope(q, q_ang)
+        k = apply_rope(k, k_ang)
+    return q, k, v
+
+
+def expand_kv(k, n_heads):
+    """(B,S,Hkv,Dh) -> (B,S,Hq,Dh) by repeating each kv head G times."""
+    g = n_heads // k.shape[2]
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def attn_out(p, o, policy):
+    return jnp.einsum("bshk,hkd->bsd", o.astype(policy.compute), p["wo"].astype(policy.compute))
+
+
+def dense_attention(q, k, v, *, causal, q_offset=0, logit_dtype=jnp.float32):
+    """Reference/dense path (train_4k, decode, encoder). q (B,Sq,H,Dh), k/v (B,Skv,H,Dh)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(logit_dtype) * scale
+    if causal:
+        qpos = jnp.arange(q.shape[1])[:, None] + q_offset
+        kpos = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """Single-step decode vs a (possibly longer-than-`length`) cache.
+
+    q (B,1,H,Dh); caches (B,Smax,H,Dh); positions >= length are masked out.
+    Runs fine with the cache sequence axis sharded (split-KV decoding: XLA
+    inserts the partial-softmax collectives).
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32) * scale
+    mask = jnp.arange(k_cache.shape[1])[None, None, None, :] < length
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v_cache)
+
+
+def _flash_pairs(sq, sk, cq, ck):
+    pairs = [(i, j) for i in range(sq // cq) for j in range((i + 1) * cq // ck)]
+    return (
+        jnp.array([p[0] for p in pairs], jnp.int32),
+        jnp.array([p[1] for p in pairs], jnp.int32),
+    )
+
+
+def _flash_fwd_core(q, k, v, cq, ck):
+    """Triangular chunk-pair scan. Returns (o fp32, lse fp32 (B,H,Sq))."""
+    b, sq, h, dh = q.shape
+    nq = sq // cq
+    scale = 1.0 / math.sqrt(dh)
+    pi, pj = _flash_pairs(sq, k.shape[1], cq, ck)
+    acc0 = jnp.zeros((nq, b, h, cq, dh), jnp.float32)
+    m0 = jnp.full((nq, b, h, cq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((nq, b, h, cq), jnp.float32)
+
+    def body(carry, ij):
+        acc, m, l = carry
+        i, j = ij
+        qc = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        kc = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc).astype(jnp.float32) * scale
+        qpos = i * cq + jnp.arange(cq)[:, None]
+        kpos = j * ck + jnp.arange(ck)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+        m_old = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        a_old = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(m_old, s.max(-1))
+        alpha = jnp.exp(m_old - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l_old * alpha + pexp.sum(-1)
+        a_new = a_old * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", pexp, vc.astype(jnp.float32)
+        )
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (pi, pj))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, sq, dh)
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))
+    lse = jnp.moveaxis(lse, 0, 2).reshape(b, h, sq)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_train(q, k, v, chunk_q=512, chunk_k=512):
+    """Causal flash attention with a flash *backward* (custom VJP).
+
+    The dense-masked train path materializes (B,H,S,S) fp32 scores in HBM —
+    the dominant roofline term of every attention arch's train_4k cell
+    (EXPERIMENTS.md §Perf hillclimb #1).  This path streams (cq, ck) tiles:
+    forward saves only (o, lse); backward re-computes per-tile scores and
+    accumulates dq/dk/dv — O(S·D) memory, ideal-causal FLOPs.
+    """
+    o, _ = _flash_fwd_core(q, k, v, min(chunk_q, q.shape[1]), min(chunk_k, k.shape[1]))
+    b, sq, h, dh = q.shape
+    return jnp.moveaxis(o, 1, 2).astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, chunk_q, chunk_k):
+    cq, ck = min(chunk_q, q.shape[1]), min(chunk_k, k.shape[1])
+    o, lse = _flash_fwd_core(q, k, v, cq, ck)
+    out = jnp.moveaxis(o, 1, 2).astype(q.dtype)  # (B,S,H,D)
+    return out, (q, k, v, o, lse)
+
+
+def _flash_bwd(chunk_q, chunk_k, res, do):
+    q, k, v, o, lse = res  # o (B,H,S,D) fp32, lse (B,H,S)
+    b, sq, h, dh = q.shape
+    cq, ck = min(chunk_q, sq), min(chunk_k, k.shape[1])
+    scale = 1.0 / math.sqrt(dh)
+    do_f = jnp.moveaxis(do.astype(jnp.float32), 1, 2)  # (B,H,S,D)
+    delta = (do_f * o).sum(-1)  # (B,H,S)
+    pi, pj = _flash_pairs(sq, k.shape[1], cq, ck)
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+
+    def body(carry, ij):
+        dq, dk, dv = carry
+        i, j = ij
+        qc = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        kc = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=1)
+        lse_c = jax.lax.dynamic_slice_in_dim(lse, i * cq, cq, axis=2)
+        dlt_c = jax.lax.dynamic_slice_in_dim(delta, i * cq, cq, axis=2)
+        do_c = jax.lax.dynamic_slice_in_dim(do_f, i * cq, cq, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc).astype(jnp.float32) * scale
+        qpos = i * cq + jnp.arange(cq)[:, None]
+        kpos = j * ck + jnp.arange(ck)[None, :]
+        p = jnp.where(qpos >= kpos, jnp.exp(s - lse_c[..., None]), 0.0)
+        dv_c = jnp.einsum("bhqk,bhqd->bkhd", p, do_c)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", do_c, vc.astype(jnp.float32))
+        ds = p * (dp - dlt_c[..., None]) * scale
+        dq_c = jnp.einsum("bhqk,bkhd->bqhd", ds, kc.astype(jnp.float32))
+        dk_c = jnp.einsum("bhqk,bqhd->bkhd", ds, qc.astype(jnp.float32))
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, i * cq, cq, 1) + dq_c, i * cq, 1
+        )
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, j * ck, ck, 1) + dk_c, j * ck, 1
+        )
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, j * ck, ck, 1) + dv_c, j * ck, 1
+        )
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), (pi, pj))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_train.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_prefill_attention(q, k, v, *, chunk_q=512, chunk_k=512):
+    """Causal chunked-flash attention for long prefill (no grad path needed).
+
+    Triangular (i, j<=i) chunk-pair scan: FLOPs = ideal causal cost (only the
+    lower-triangular chunk grid is visited), memory = O(chunk² + output).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    cq, ck = min(chunk_q, sq), min(chunk_k, sk)
+    assert sq % cq == 0 and sk % ck == 0
+    nq = sq // cq
+    scale = 1.0 / math.sqrt(dh)
+    pairs = [(i, j) for i in range(nq) for j in range((i + 1) * cq // ck)]
+    pi = jnp.array([p[0] for p in pairs], jnp.int32)
+    pj = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    acc0 = jnp.zeros((nq, b, h, cq, dh), jnp.float32)
+    m0 = jnp.full((nq, b, h, cq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((nq, b, h, cq), jnp.float32)
+
+    def body(carry, ij):
+        acc, m, l = carry
+        i, j = ij
+        qc = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        kc = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc).astype(jnp.float32) * scale
+        qpos = i * cq + jnp.arange(cq)[:, None]
+        kpos = j * ck + jnp.arange(ck)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+        m_old = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        a_old = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_blk = s.max(-1)
+        m_new = jnp.maximum(m_old, m_blk)
+        alpha = jnp.exp(m_old - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l_old * alpha + pexp.sum(-1)
+        a_new = a_old * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", pexp, vc.astype(jnp.float32)
+        )
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (pi, pj))
+    out = acc / jnp.maximum(l[..., None], 1e-30)  # (nq, b, h, cq, dh)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def mlp_specs(cfg, tp: int, d_ff=None, dtype=None, fsdp=False):
+    dtype = dtype or cfg.params_dtype
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    in_sp = P("data" if fsdp else None, "model")
+    out_sp = P("model", "data" if fsdp else None)
+    s = {
+        "w_in": ParamSpec((d, f), dtype, in_sp),
+        "w_out": ParamSpec((f, d), dtype, out_sp),
+    }
+    if cfg.act == "swiglu":
+        s["w_gate"] = ParamSpec((d, f), dtype, in_sp)
+    return s
+
+
+def apply_mlp(cfg, p, x, policy: DTypePolicy):
+    cdt = policy.compute
+    xc = x.astype(cdt)
+    h = xc @ p["w_in"].astype(cdt)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(xc @ p["w_gate"].astype(cdt)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w_out"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+
+
+def embed_specs(cfg, tp: int):
+    vocab_ax = "model" if cfg.vocab_size % tp == 0 else None
+    return {
+        "table": ParamSpec(
+            (cfg.vocab_size, cfg.d_model), cfg.params_dtype, P(vocab_ax, None), init="small"
+        )
+    }
+
+
+def embed(p, tokens, policy):
+    return jnp.take(p["table"], tokens, axis=0).astype(policy.compute)
+
+
+def logits_specs(cfg, tp: int):
+    if cfg.tie_embeddings:
+        return {}
+    vocab_ax = "model" if cfg.vocab_size % tp == 0 else None
+    return {"w": ParamSpec((cfg.d_model, cfg.vocab_size), cfg.params_dtype, P(None, vocab_ax))}
+
+
+def logits(cfg, p_lm, p_embed, x, policy):
+    """Returns logits sharded over 'model' on the vocab axis (never gathered)."""
+    cdt = policy.compute
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x.astype(cdt), p_embed["table"].astype(cdt))
+    return x.astype(cdt) @ p_lm["w"].astype(cdt)
+
+
+def cross_entropy(lg, targets, mask=None):
+    """Mean next-token CE from (B,S,V) logits (V may be sharded) in fp32."""
+    lg = lg.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    tgt = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,279 @@
+"""Model API: ``build(cfg)`` -> specs + pure functions, plus the per-cell
+input/cache ShapeDtypeStruct + PartitionSpec builders used by the launchers
+and the multi-pod dry-run.
+
+Sharding policy
+---------------
+- activations: batch over ("pod","data"); everything else decided by GSPMD
+  from weight specs + a few constraints.
+- weights: TP over "model" where the relevant axis divides (see layers.py /
+  moe.py / ssm.py spec builders); FSDP over "data" for kimi-k2 expert weights.
+- KV caches: batch over data axes when large enough, kv-heads over "model"
+  when divisible, sequence over leftover axes (split-KV decode otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common import DTypePolicy, ParamSpec, init_params, shape_dtypes
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.models import layers as L
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models.ssm import ssm_state_shape
+
+TP = 16  # model-axis size of the production meshes
+
+
+def needs_fsdp(cfg: ModelConfig) -> bool:
+    """FSDP (data-axis) sharding of expert weights for very large MoE.
+
+    Threshold: total expert params > 20 B — TP-only sharding (16-way) of the
+    expert stack would then exceed ~2.5 GB/chip in bf16, so the weights are
+    additionally sharded over the data axis and all-gathered per layer.
+    """
+    if cfg.moe is None:
+        return False
+    m = cfg.moe
+    expert_params = (cfg.n_layers - m.first_k_dense) * m.n_experts * 3 * cfg.d_model * m.d_ff_expert
+    return expert_params > 2e10
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    policy: DTypePolicy
+    specs: Any
+
+    def init(self, key):
+        return init_params(key, self.specs)
+
+    # ---- training ----
+    def loss(self, params, batch, mesh=None):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            h = ED.encdec_loss_forward(cfg, params, batch, self.policy, mesh=mesh)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            h, _, aux = TF.forward(
+                cfg, params, batch, self.policy, mode="train", mesh=mesh, fsdp=needs_fsdp(cfg)
+            )
+        lg = TF.lm_logits(cfg, params, h, self.policy)
+        ce = L.cross_entropy(lg[:, :-1], batch["tokens"][:, 1:])
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # ---- serving ----
+    def prefill(self, params, batch, mesh=None):
+        """Returns (cache, last-token logits)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            memory = ED.encode(cfg, params, batch["enc_feats"], self.policy, mesh=mesh)
+            xkv = ED.cross_kv(cfg, params, memory, self.policy)
+            h, self_c = ED.decode_forward(
+                cfg, params, batch["tokens"], self.policy, mode="prefill", cache=None,
+                xkv=xkv, mesh=mesh,
+            )
+            cache = {"self": self_c, "cross": xkv}
+        else:
+            h, cache, _ = TF.forward(
+                cfg, params, batch, self.policy, mode="prefill", mesh=mesh,
+                fsdp=needs_fsdp(cfg), cache=None,
+            )
+        lg = TF.lm_logits(cfg, params, h[:, -1:], self.policy)
+        return cache, lg
+
+    def decode_step(self, params, cache, batch, pos, mesh=None):
+        """One token for every sequence in the batch. Returns (logits, cache)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            h, self_c = ED.decode_forward(
+                cfg, params, batch["tokens"], self.policy, mode="decode",
+                cache=cache["self"], xkv=cache["cross"], pos=pos, mesh=mesh,
+            )
+            new_cache = {"self": self_c, "cross": cache["cross"]}
+        else:
+            h, new_cache, _ = TF.forward(
+                cfg, params, batch, self.policy, mode="decode", mesh=mesh,
+                fsdp=needs_fsdp(cfg), cache=cache, pos=pos,
+            )
+        lg = TF.lm_logits(cfg, params, h, self.policy)
+        return lg, new_cache
+
+
+def fsdp_params(cfg: ModelConfig, tp: int = TP) -> bool:
+    """Full param FSDP (data-axis sharding of every large weight) when
+    TP-only sharding would exceed ~4 GB/chip of raw parameter bytes."""
+    from repro.common import param_bytes
+
+    m = build_specs_only(cfg, tp)
+    return param_bytes(m) / tp > 4 * 2**30
+
+
+def build_specs_only(cfg: ModelConfig, tp: int = TP):
+    if cfg.family == "encdec":
+        return ED.encdec_specs(cfg, tp)
+    return TF.decoder_specs(cfg, tp, fsdp=needs_fsdp(cfg))
+
+
+def build(cfg: ModelConfig, tp: int = TP) -> Model:
+    from repro.common import is_spec
+    from repro.train.optimizer import zero1_pspec
+
+    policy = DTypePolicy(params=cfg.params_dtype)
+    specs = build_specs_only(cfg, tp)
+    if fsdp_params(cfg, tp):
+        # shard every large weight's biggest free axis over 'data' (ZeRO-3 /
+        # FSDP); weights are re-gathered per layer inside the scan by GSPMD.
+        def respec(s):
+            import numpy as np
+
+            if int(np.prod(s.shape)) < 2**20:
+                return s
+            return dataclasses.replace(s, pspec=zero1_pspec(s))
+
+        specs = jax.tree.map(respec, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return Model(cfg=cfg, policy=policy, specs=specs)
+
+
+# ---------------------------------------------------------------------------
+# per-cell input specs (ShapeDtypeStruct stand-ins; no allocation)
+
+
+def _batch_axes(batch: int, min_shards: int = 16):
+    return ("pod", "data") if batch >= min_shards else None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str):
+    """Returns (inputs, pspecs) for one (arch, shape) cell.
+
+    ``inputs`` are ShapeDtypeStructs; decode cells also carry the cache via
+    ``cache_specs`` (separate function, since it is donated state).
+    """
+    shape = SHAPES[shape] if isinstance(shape, str) else shape
+    b, s = shape.global_batch, shape.seq_len
+    bax = _batch_axes(b)
+    tok = jnp.int32
+    inputs: dict[str, Any] = {}
+    pspecs: dict[str, Any] = {}
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            inputs["enc_feats"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+            inputs["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+        elif shape.kind == "prefill":
+            inputs["enc_feats"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+            inputs["tokens"] = jax.ShapeDtypeStruct((b, 448), tok)
+        else:  # decode
+            inputs["tokens"] = jax.ShapeDtypeStruct((b, 1), tok)
+        pspecs = {k: P(bax, *([None] * (len(v.shape) - 1))) for k, v in inputs.items()}
+        return inputs, pspecs
+
+    if shape.kind == "decode":
+        inputs["tokens"] = jax.ShapeDtypeStruct((b, 1), tok)
+        if cfg.mrope:
+            inputs["mrope_pos"] = jax.ShapeDtypeStruct((3, b, 1), tok)
+    else:
+        inputs["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+        if cfg.family == "vlm":
+            nv = min(cfg.n_vision_tokens, s // 2)
+            inputs["vision_embeds"] = jax.ShapeDtypeStruct((b, nv, cfg.d_model), jnp.bfloat16)
+        if cfg.mrope:
+            inputs["mrope_pos"] = jax.ShapeDtypeStruct((3, b, s), tok)
+    for k, v in inputs.items():
+        if k == "mrope_pos":
+            pspecs[k] = P(None, bax, None)
+        else:
+            pspecs[k] = P(bax, *([None] * (len(v.shape) - 1)))
+    return inputs, pspecs
+
+
+def _attn_cache_cell(cfg, batch, seq, n_stack, tp=TP, inner=None):
+    """(sds, pspec) for one stacked attention cache entry (k or v)."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    lead = (n_stack,) if inner is None else (n_stack, inner)
+    sds = jax.ShapeDtypeStruct(lead + (batch, seq, hkv, dh), jnp.bfloat16)
+    bax = _batch_axes(batch)
+    hax = "model" if hkv % tp == 0 else None
+    if hax and bax:
+        seq_ax = None
+    elif hax:
+        seq_ax = "data"  # long-context, tiny batch: split-KV over data
+    elif bax:
+        seq_ax = "model"  # heads unshardable: split-KV over model
+    else:
+        seq_ax = ("data", "model")
+    div = tp * tp if isinstance(seq_ax, tuple) else tp
+    if seq_ax is not None and seq % div != 0:
+        seq_ax = None  # e.g. whisper's 1500-frame cross-attention memory
+    pspec = P(*([None] * len(lead)), bax, seq_ax, hax, None)
+    return sds, pspec
+
+
+def _ssm_cache_cell(cfg, batch, n_stack, inner=None, tp=TP):
+    shp = ssm_state_shape(cfg, batch)
+    lead = (n_stack,) if inner is None else (n_stack, inner)
+    bax = _batch_axes(batch)
+    lead_p = [None] * len(lead)
+
+    def one(name, s):
+        sds = jax.ShapeDtypeStruct(lead + s.shape, s.dtype)
+        if name in ("conv", "conv_x"):
+            pspec = P(*lead_p, bax, None, "model")
+        elif name == "conv_bc":
+            pspec = P(*lead_p, bax, None, None)
+        elif cfg.ssm.version == 1:  # ssm state (B, din, N)
+            pspec = P(*lead_p, bax, "model", None)
+        else:  # (B, nh, N, P)
+            pspec = P(*lead_p, bax, "model", None, None)
+        return sds, pspec
+
+    sds = {k: one(k, v)[0] for k, v in shp.items()}
+    ps = {k: one(k, v)[1] for k, v in shp.items()}
+    return sds, ps
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig | str, tp: int = TP):
+    """Decode-cell cache (sds_tree, pspec_tree) matching forward()'s layout."""
+    shape = SHAPES[shape] if isinstance(shape, str) else shape
+    b, s = shape.global_batch, shape.seq_len
+    fam = cfg.family
+    if fam == "encdec":
+        ksd, kps = _attn_cache_cell(cfg, b, s, cfg.n_layers, tp)
+        # prefill encodes the full input (cross length = seq_len, shardable
+        # over 'model' — this sharding propagates back into the encoder);
+        # standalone decode cells use the native audio-frame memory length
+        cross_len = s if shape.kind == "prefill" else cfg.n_audio_frames
+        xsd, xps = _attn_cache_cell(cfg, b, cross_len, cfg.n_layers, tp)
+        return (
+            {"self": (ksd, ksd), "cross": (xsd, xsd)},
+            {"self": (kps, kps), "cross": (xps, xps)},
+        )
+    if fam in ("dense", "vlm"):
+        ksd, kps = _attn_cache_cell(cfg, b, s, cfg.n_layers, tp)
+        return {"layers": (ksd, ksd)}, {"layers": (kps, kps)}
+    if fam == "moe":
+        out_s, out_p = {}, {}
+        if cfg.moe.first_k_dense:
+            ksd, kps = _attn_cache_cell(cfg, b, s, cfg.moe.first_k_dense, tp)
+            out_s["dense_layers"], out_p["dense_layers"] = (ksd, ksd), (kps, kps)
+        ksd, kps = _attn_cache_cell(cfg, b, s, cfg.n_layers - cfg.moe.first_k_dense, tp)
+        out_s["layers"], out_p["layers"] = (ksd, ksd), (kps, kps)
+        return out_s, out_p
+    if fam == "ssm":
+        ssd, sps = _ssm_cache_cell(cfg, b, cfg.n_layers, tp=tp)
+        return {"layers": ssd}, {"layers": sps}
+    if fam == "hybrid":
+        ng = TF.n_groups(cfg)
+        ksd, kps = _attn_cache_cell(cfg, b, s, ng, tp)
+        ssd, sps = _ssm_cache_cell(cfg, b, ng, inner=cfg.attn_every, tp=tp)
+        return (
+            {"groups": {"attn": (ksd, ksd), "ssm": ssd}},
+            {"groups": {"attn": (kps, kps), "ssm": sps}},
+        )
+    raise ValueError(fam)

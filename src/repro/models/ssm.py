@@ -1,0 +1,259 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD, chunked).
+
+Training/prefill use a chunked formulation: a sequential ``lax.scan`` over
+chunks carrying the SSM state, with an intra-chunk associative scan (Mamba-1)
+or the quadratic-within-chunk SSD matrix form (Mamba-2).  Decode is a single
+O(1) state update — context length never enters the cost, which is why the
+``long_500k`` cell is runnable for these families.
+
+Sharding: the inner dimension (``d_inner`` / heads) shards over ``model``;
+state tensors are tiny.  The x-projection contracts over the sharded
+``d_inner`` axis (psum inserted by GSPMD), mirroring a Megatron FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common import DTypePolicy, ParamSpec
+
+
+def _dinner(cfg):
+    return cfg.ssm.expand * cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+
+
+def mamba1_specs(cfg, tp: int):
+    s = cfg.ssm
+    d, din, n = cfg.d_model, _dinner(cfg), s.d_state
+    dtr = s.dt_rank or d // 16
+    dt = cfg.params_dtype
+    return {
+        "in_proj": ParamSpec((d, 2 * din), dt, P(None, "model")),
+        "conv_w": ParamSpec((s.d_conv, din), dt, P(None, "model"), init="small"),
+        "conv_b": ParamSpec((din,), jnp.float32, P("model"), init="zeros"),
+        "x_proj": ParamSpec((din, dtr + 2 * n), dt, P("model", None)),
+        "dt_proj": ParamSpec((dtr, din), dt, P(None, "model"), init="small"),
+        "dt_bias": ParamSpec((din,), jnp.float32, P("model"), init="zeros"),
+        "a_log": ParamSpec((din, n), jnp.float32, P("model", None), init="ones"),
+        "d_skip": ParamSpec((din,), jnp.float32, P("model"), init="ones"),
+        "out_proj": ParamSpec((din, d), dt, P("model", None)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x (B,S,C), w (K,C). state (B,K-1,C) for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1) :, :]
+    return y + b.astype(x.dtype), new_state
+
+
+def _mamba1_core(cfg, p, xin, h0, policy):
+    """xin (B,S,din) post-conv activations; h0 (B,din,N) fp32. Chunked scan.
+
+    §Perf hillclimb (falcon-mamba train/prefill): the (B,S,din,N) decay/drive
+    tensors are N× the activations — materializing them at full sequence
+    length made the mamba cells ~300× memory-bound.  They are now expanded
+    *per chunk inside the scan body* (and rematerialized in backward via
+    jax.checkpoint), so HBM sees only the (B,S,din)-sized inputs/outputs plus
+    transient (B,chunk,din,N) tiles.  The Pallas ssm_scan kernel is the
+    per-device production form of the same fusion.
+    """
+    s = cfg.ssm
+    n = s.d_state
+    dtr = s.dt_rank or cfg.d_model // 16
+    cdt = policy.compute
+    b, seq, din = xin.shape
+    chunk = min(s.chunk, seq)
+    assert seq % chunk == 0
+    xbc = xin.astype(cdt) @ p["x_proj"].astype(cdt)  # (B,S,dtr+2N), psum over din
+    dt_in, bmat, cmat = jnp.split(xbc.astype(jnp.float32), [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])  # (din, N)
+
+    @jax.checkpoint
+    def chunk_step(h, inputs):
+        dt_c, x_c, b_c, c_c = inputs  # (B,c,din) (B,c,din) (B,c,N) (B,c,N)
+        da_c = jnp.exp(dt_c[..., None] * a)  # (B,c,din,N) — transient
+        dbx_c = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+
+        # NOTE (§Perf iteration 2, refuted): replacing this associative scan
+        # with a sequential within-chunk lax.scan *increased* the measured
+        # HLO traffic 6× (per-step while-loop boundaries defeat fusion in
+        # XLA:CPU HLO); the log-depth sweep keeps tensors inside fusions.
+        # The true register-resident form is the Pallas ssm_scan kernel.
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        cum_a, part = jax.lax.associative_scan(comb, (da_c, dbx_c), axis=1)
+        states = cum_a * h[:, None] + part  # (B,c,din,N)
+        y = jnp.einsum("bsdn,bsn->bsd", states, c_c)
+        return states[:, -1], y
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, seq // chunk, chunk, *t.shape[2:]), 1, 0)
+
+    h_last, y = jax.lax.scan(
+        chunk_step, h0,
+        (to_chunks(dt), to_chunks(xin.astype(jnp.float32)), to_chunks(bmat), to_chunks(cmat)),
+    )
+    y = jnp.moveaxis(y, 0, 1).reshape(b, seq, din)
+    y = y + xin.astype(jnp.float32) * p["d_skip"]
+    return y, h_last
+
+
+def mamba1_block(cfg, p, x, policy: DTypePolicy, state=None):
+    """Full block. state = None (train/prefill, h0=0) or dict for decode carry."""
+    cdt = policy.compute
+    b, seq, _ = x.shape
+    din = _dinner(cfg)
+    xz = x.astype(cdt) @ p["in_proj"].astype(cdt)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    h0 = (
+        jnp.zeros((b, din, cfg.ssm.d_state), jnp.float32)
+        if state is None
+        else state["ssm"]
+    )
+    xin, new_conv = _causal_conv(xin, p["conv_w"].astype(cdt), p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+    y, h_last = _mamba1_core(cfg, p, xin, h0, policy)
+    out = (y.astype(cdt) * jax.nn.silu(z)) @ p["out_proj"].astype(cdt)
+    return out, {"conv": new_conv, "ssm": h_last}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+
+
+def mamba2_specs(cfg, tp: int):
+    s = cfg.ssm
+    d, din, n = cfg.d_model, _dinner(cfg), s.d_state
+    nh = din // s.head_dim
+    dt = cfg.params_dtype
+    # x/z projection shards over model (shard boundaries align with heads);
+    # the small B/C/dt projection stays replicated to avoid mid-axis resharding.
+    return {
+        "in_proj": ParamSpec((d, 2 * din), dt, P(None, "model")),
+        "bcdt_proj": ParamSpec((d, 2 * n + nh), dt, P(None, None)),
+        "conv_x_w": ParamSpec((s.d_conv, din), dt, P(None, "model"), init="small"),
+        "conv_x_b": ParamSpec((din,), jnp.float32, P("model"), init="zeros"),
+        "conv_bc_w": ParamSpec((s.d_conv, 2 * n), dt, P(None, None), init="small"),
+        "conv_bc_b": ParamSpec((2 * n,), jnp.float32, P(), init="zeros"),
+        "a_log": ParamSpec((nh,), jnp.float32, P(), init="ones"),
+        "dt_bias": ParamSpec((nh,), jnp.float32, P(), init="zeros"),
+        "d_skip": ParamSpec((nh,), jnp.float32, P(), init="ones"),
+        "norm_scale": ParamSpec((din,), jnp.float32, P("model"), init="ones"),
+        "out_proj": ParamSpec((din, d), dt, P("model", None)),
+    }
+
+
+def _ssd_core(cfg, xh, bmat, cmat, dt, a_log, h0):
+    """Chunked SSD. xh (B,S,H,P) fp32, bmat/cmat (B,S,N), dt (B,S,H), h0 (B,H,N,P)."""
+    s = cfg.ssm
+    b, seq, nh, pd = xh.shape
+    n = bmat.shape[-1]
+    chunk = min(s.chunk, seq)
+    assert seq % chunk == 0
+    nchunks = seq // chunk
+    la = -jnp.exp(a_log) * dt  # (B,S,H) log decay per step (negative)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nchunks, chunk, *t.shape[2:]), 1, 0)
+
+    def chunk_step(h, inputs):
+        xc, bc, cc, dtc, lac = inputs  # (B,c,H,P) (B,c,N) (B,c,N) (B,c,H) (B,c,H)
+        cs = jnp.cumsum(lac, axis=1)  # (B,c,H) cumulative log decay
+        # intra-chunk: Y[i] = sum_{j<=i} C_i·B_j dt_j exp(cs_i - cs_j) x_j
+        decay = cs[:, :, None, :] - cs[:, None, :, :]  # (B,i,j,H)
+        ii = jnp.arange(chunk)
+        mask = ii[:, None] >= ii[None, :]
+        gate = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", cc, bc)[:, :, :, None] * gate  # (B,i,j,H)
+        y = jnp.einsum("bijh,bjh,bjhp->bihp", scores, dtc, xc)
+        # inter-chunk: contribution of carry state
+        y = y + jnp.einsum("bin,bih,bhnp->bihp", cc, jnp.exp(cs), h)
+        # new state
+        dec_end = jnp.exp(cs[:, -1:, :] - cs)  # (B,c,H)
+        st = jnp.einsum("bjn,bjh,bjhp->bhnp", bc, dtc * dec_end, xc)
+        h_new = jnp.exp(cs[:, -1])[:, :, None, None] * h + st
+        return h_new, y
+
+    h_last, y = jax.lax.scan(
+        chunk_step, h0, (to_chunks(xh), to_chunks(bmat), to_chunks(cmat), to_chunks(dt), to_chunks(la))
+    )
+    y = jnp.moveaxis(y, 0, 1).reshape(b, seq, nh, pd)
+    return y, h_last
+
+
+def mamba2_block(cfg, p, x, policy: DTypePolicy, state=None):
+    s = cfg.ssm
+    cdt = policy.compute
+    b, seq, _ = x.shape
+    din, n = _dinner(cfg), s.d_state
+    nh, pd = din // s.head_dim, s.head_dim
+    xz = x.astype(cdt) @ p["in_proj"].astype(cdt)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bcdt = x.astype(cdt) @ p["bcdt_proj"].astype(cdt)
+    bc, dt_in = bcdt[..., : 2 * n], bcdt[..., 2 * n :]
+    xin, new_conv_x = _causal_conv(
+        xin, p["conv_x_w"].astype(cdt), p["conv_x_b"], None if state is None else state["conv_x"]
+    )
+    bc, new_conv_bc = _causal_conv(
+        bc, p["conv_bc_w"].astype(cdt), p["conv_bc_b"], None if state is None else state["conv_bc"]
+    )
+    xin = jax.nn.silu(xin)
+    bc = jax.nn.silu(bc)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    xh = xin.astype(jnp.float32).reshape(b, seq, nh, pd)
+    h0 = (
+        jnp.zeros((b, nh, n, pd), jnp.float32)
+        if state is None
+        else state["ssm"]
+    )
+    y, h_last = _ssd_core(cfg, xh, bmat.astype(jnp.float32), cmat.astype(jnp.float32), dt, p["a_log"], h0)
+    y = y + xh * (dt * p["d_skip"])[..., None]  # dt-scaled skip (Mamba-2 D term)
+    y = y.reshape(b, seq, din)
+    # gated RMSNorm then out-projection
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    var = (yz * yz).mean(-1, keepdims=True)
+    yz = yz * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]
+    out = yz.astype(cdt) @ p["out_proj"].astype(cdt)
+    return out, {"conv_x": new_conv_x, "conv_bc": new_conv_bc, "ssm": h_last}
+
+
+def ssm_block(cfg, p, x, policy, state=None):
+    if cfg.ssm.version == 1:
+        return mamba1_block(cfg, p, x, policy, state)
+    return mamba2_block(cfg, p, x, policy, state)
+
+
+def ssm_state_shape(cfg, batch: int):
+    """Decode-state ShapeDtypeStructs for one layer."""
+    s = cfg.ssm
+    din = _dinner(cfg)
+    if s.version == 1:
+        return {
+            "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, din), jnp.bfloat16),
+            "ssm": jax.ShapeDtypeStruct((batch, din, s.d_state), jnp.float32),
+        }
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, s.d_conv - 1, din), jnp.bfloat16),
+        "conv_bc": jax.ShapeDtypeStruct((batch, s.d_conv - 1, 2 * s.d_state), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, din // s.head_dim, s.d_state, s.head_dim), jnp.float32
+        ),
+    }

@@ -1,0 +1,324 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid / VLM families.
+
+Layers are *scanned* (stacked params with a leading L axis) — compile time
+stays flat in depth, which matters when lowering 61–88-layer models for 512
+devices.  Heterogeneous structure is expressed as a few homogeneous scans:
+
+- moe:    ``first_k_dense`` dense layers (own scan) + scanned MoE layers
+- hybrid: outer scan over groups of (shared-weight attention block +
+          ``attn_every`` Mamba-2 layers), inner scan over the group
+- vlm:    dense layers + vision-embed merge + M-RoPE angles
+
+Modes: ``train`` (dense causal attention, remat), ``prefill`` (chunked flash,
+returns KV caches), ``decode`` (grouped-query attention against a cache whose
+sequence axis may be sharded — split-KV decoding).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common import DTypePolicy, ParamSpec, with_sharding
+from repro.models import layers as L
+from repro.models.moe import apply_moe, moe_specs
+from repro.models.ssm import ssm_block, mamba1_specs, mamba2_specs, ssm_state_shape
+
+
+def stack_specs(tree, n: int):
+    """Prepend a layer axis of size n to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, s.dtype, P(None, *s.pspec), init=s.init),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _attn_block_specs(cfg, tp):
+    return {"ln": L.norm_specs(cfg), "attn": L.attn_specs(cfg, tp)}
+
+
+def _dense_layer_specs(cfg, tp, d_ff=None):
+    return {
+        "ln1": L.norm_specs(cfg),
+        "attn": L.attn_specs(cfg, tp),
+        "ln2": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg, tp, d_ff=d_ff),
+    }
+
+
+def _moe_layer_specs(cfg, tp, fsdp):
+    return {
+        "ln1": L.norm_specs(cfg),
+        "attn": L.attn_specs(cfg, tp),
+        "ln2": L.norm_specs(cfg),
+        "moe": moe_specs(cfg, tp, fsdp=fsdp),
+    }
+
+
+def _ssm_layer_specs(cfg, tp):
+    sfn = mamba1_specs if cfg.ssm.version == 1 else mamba2_specs
+    return {"ln": L.norm_specs(cfg), "ssm": sfn(cfg, tp)}
+
+
+def n_groups(cfg):
+    return cfg.n_layers // cfg.attn_every
+
+
+def decoder_specs(cfg, tp: int = 16, fsdp: bool = False):
+    s = {"embed": L.embed_specs(cfg, tp), "final_norm": L.norm_specs(cfg)}
+    s.update(L.logits_specs(cfg, tp))  # adds "w" unless tied
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        s["layers"] = stack_specs(_dense_layer_specs(cfg, tp), cfg.n_layers)
+    elif fam == "moe":
+        m = cfg.moe
+        if m.first_k_dense:
+            s["dense_layers"] = stack_specs(
+                _dense_layer_specs(cfg, tp, d_ff=m.d_ff_dense), m.first_k_dense
+            )
+        s["layers"] = stack_specs(
+            _moe_layer_specs(cfg, tp, fsdp), cfg.n_layers - m.first_k_dense
+        )
+    elif fam == "ssm":
+        s["layers"] = stack_specs(_ssm_layer_specs(cfg, tp), cfg.n_layers)
+    elif fam == "hybrid":
+        s["shared_attn"] = _attn_block_specs(cfg, tp)
+        s["layers"] = stack_specs(
+            stack_specs(_ssm_layer_specs(cfg, tp), cfg.attn_every), n_groups(cfg)
+        )
+    else:
+        raise ValueError(fam)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# sub-block applications
+
+
+def _grouped_decode_attention(q, k_cache, v_cache, length):
+    """q (B,1,Hq,Dh) vs cache (B,Smax,Hkv,Dh); no kv expansion (GQA grouped).
+
+    Works with the cache sequence axis sharded (split-KV decode): the softmax
+    reductions over the sharded axis become partial-max/sum collectives.
+    """
+    b, _, hq, dh = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache).astype(jnp.float32) * scale
+    mask = jnp.arange(k_cache.shape[1])[None, None, None, None, :] < length
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v_cache)
+    return o.reshape(b, 1, hq, dh)
+
+
+def attn_apply(cfg, p, x, policy, *, mode, angles, cache=None, pos=None):
+    """Attention sub-block body. Returns (out, new_cache).
+
+    new_cache: (k, v) new entries for prefill; updated (k_cache, v_cache) for
+    decode; None for train.
+    """
+    q, k, v = L.qkv_project(cfg, p["attn"], x, policy, angles=angles)
+    nh = q.shape[2]  # possibly pad-extended for TP divisibility
+    if mode == "train":
+        ke, ve = L.expand_kv(k, nh), L.expand_kv(v, nh)
+        if cfg.attn_impl == "flash" and q.shape[1] >= 512:
+            o = L.flash_attention_train(q, ke, ve)
+        else:
+            o = L.dense_attention(q, ke, ve, causal=True)
+        return L.attn_out(p["attn"], L.mask_pad_heads(cfg, o), policy), None
+    if mode == "prefill":
+        o = L.flash_prefill_attention(q, L.expand_kv(k, nh), L.expand_kv(v, nh))
+        return L.attn_out(p["attn"], L.mask_pad_heads(cfg, o), policy), (k, v)
+    if mode == "decode":
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), pos, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), pos, axis=1
+        )
+        o = _grouped_decode_attention(q, k_cache, v_cache, pos + 1)
+        return L.attn_out(p["attn"], L.mask_pad_heads(cfg, o), policy), (k_cache, v_cache)
+    raise ValueError(mode)
+
+
+def dense_layer(cfg, p, x, policy, *, mode, angles, cache=None, pos=None, mesh=None):
+    a, new_cache = attn_apply(
+        cfg, p, L.apply_norm(cfg, p["ln1"], x), policy,
+        mode=mode, angles=angles, cache=cache, pos=pos,
+    )
+    x = x + a
+    x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x), policy)
+    return x, new_cache
+
+
+def moe_layer(cfg, p, x, policy, *, mode, angles, cache=None, pos=None, mesh=None, fsdp=False):
+    a, new_cache = attn_apply(
+        cfg, p, L.apply_norm(cfg, p["ln1"], x), policy,
+        mode=mode, angles=angles, cache=cache, pos=pos,
+    )
+    x = x + a
+    y, aux = apply_moe(
+        cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x), policy, mesh=mesh, fsdp=fsdp,
+        decode=(mode == "decode"),
+    )
+    return x + y, new_cache, aux
+
+
+def ssm_layer(cfg, p, x, policy, state=None):
+    y, new_state = ssm_block(cfg, p["ssm"], L.apply_norm(cfg, p["ln"], x), policy, state=state)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def _embed_and_angles(cfg, params, batch, policy, mode, pos):
+    tokens = batch["tokens"]
+    h = L.embed(params["embed"], tokens, policy) * math.sqrt(cfg.d_model)
+    if cfg.family == "vlm" and "vision_embeds" in batch and mode != "decode":
+        nv = batch["vision_embeds"].shape[1]
+        h = jnp.concatenate([batch["vision_embeds"].astype(h.dtype), h[:, nv:]], axis=1)
+    if cfg.attn_free:
+        return h, None
+    if cfg.mrope and "mrope_pos" in batch:
+        angles = L.mrope_angles(
+            batch["mrope_pos"], cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
+        )
+    else:
+        b, s = tokens.shape
+        if mode == "decode":
+            positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (b, 1))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        angles = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    return h, angles
+
+
+def forward(cfg, params, batch, policy, *, mode, mesh=None, fsdp=False, cache=None, pos=None):
+    """Core forward.  Returns (hidden, new_cache, aux_loss).
+
+    ``cache`` / ``new_cache`` pytrees are stacked over the scanned layer axis:
+      dense/vlm: {"layers": (k, v)}           each (L, B, S, Hkv, Dh)
+      moe:       {"dense_layers": ..., "layers": ...}
+      ssm:       {"layers": ssm-state tree}   leaves (L, B, ...)
+      hybrid:    {"groups": {"attn": (k, v), "ssm": state}}  (G, ...) / (G, E, ...)
+    For prefill, pass ``cache`` = preallocated zero caches (entries are
+    written at [0:S]); for train pass None.
+    """
+    h, angles = _embed_and_angles(cfg, params, batch, policy, mode, pos)
+    h = with_sharding(h, mesh, P(L.DATA_AXES, None, None))
+    aux0 = jnp.zeros((), jnp.float32)
+    remat = cfg.remat != "none" and mode == "train"
+    if not remat:
+        ckpt = lambda f: f
+    elif cfg.remat == "save_dots":
+        # §Perf: saving matmul outputs (cheap per chip under TP) lets the
+        # backward skip re-running the forward's fusion chains — trades a
+        # little HBM for a large cut in recompute traffic.
+        ckpt = partial(
+            jax.checkpoint,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    else:
+        ckpt = jax.checkpoint
+    constrain = lambda x: with_sharding(x, mesh, P(L.DATA_AXES, None, None))
+    fam = cfg.family
+    new_cache = {}
+    write_pos = 0 if mode == "prefill" else pos
+
+    if fam in ("dense", "vlm", "moe"):
+        def dense_body(x, xs):
+            lp, c = xs
+            x, c_out = dense_layer(
+                cfg, lp, x, policy, mode=mode, angles=angles, cache=c, pos=write_pos, mesh=mesh
+            )
+            return constrain(x), c_out
+
+        def moe_body(carry, xs):
+            x, aux = carry
+            lp, c = xs
+            x, c_out, a = moe_layer(
+                cfg, lp, x, policy, mode=mode, angles=angles, cache=c,
+                pos=write_pos, mesh=mesh, fsdp=fsdp,
+            )
+            return (constrain(x), aux + a), c_out
+
+        aux = aux0
+        if fam == "moe" and cfg.moe.first_k_dense:
+            c = cache["dense_layers"] if (cache is not None and mode == "decode") else None
+            h, c_out = jax.lax.scan(ckpt(dense_body), h, (params["dense_layers"], c))
+            new_cache["dense_layers"] = c_out
+        key_cache = cache["layers"] if (cache is not None and mode == "decode") else None
+        if fam == "moe":
+            (h, aux), c_out = jax.lax.scan(
+                ckpt(moe_body), (h, aux0), (params["layers"], key_cache)
+            )
+        else:
+            h, c_out = jax.lax.scan(ckpt(dense_body), h, (params["layers"], key_cache))
+        new_cache["layers"] = c_out
+        return _finish(cfg, params, h), (new_cache if mode != "train" else None), aux
+
+    if fam == "ssm":
+        def ssm_body(x, xs):
+            lp, st = xs
+            x, st_out = ssm_layer(cfg, lp, x, policy, state=st)
+            return constrain(x), st_out
+
+        st_in = cache["layers"] if cache is not None else None
+        h, st_out = jax.lax.scan(ckpt(ssm_body), h, (params["layers"], st_in))
+        return _finish(cfg, params, h), ({"layers": st_out} if mode != "train" else None), aux0
+
+    if fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(x, xs):
+            gp, gc = xs
+            a, attn_c = attn_apply(
+                cfg, shared, L.apply_norm(cfg, shared["ln"], x), policy,
+                mode=mode, angles=angles, cache=gc["attn"], pos=write_pos,
+            )
+            x = x + a
+
+            def inner(x2, xs2):
+                lp, st = xs2
+                x2, st_out = ssm_layer(cfg, lp, x2, policy, state=st)
+                return x2, st_out
+
+            x, st_out = jax.lax.scan(inner, x, (gp, gc["ssm"]))
+            return constrain(x), {"attn": attn_c, "ssm": st_out}
+
+        if cache is not None:
+            gc_in = cache["groups"]
+        else:  # train: zero ssm states, no attn cache
+            gc_in = {
+                "attn": None,
+                "ssm": _zero_ssm_states(cfg, h.shape[0], n_groups(cfg), inner=cfg.attn_every),
+            }
+        h, gc_out = jax.lax.scan(ckpt(group_body), h, (params["layers"], gc_in))
+        return _finish(cfg, params, h), ({"groups": gc_out} if mode != "train" else None), aux0
+
+    raise ValueError(fam)
+
+
+def _zero_ssm_states(cfg, batch, n, inner=None):
+    shp = ssm_state_shape(cfg, batch)
+    lead = (n,) if inner is None else (n, inner)
+    return jax.tree.map(lambda s: jnp.zeros(lead + s.shape, s.dtype), shp)
+
+
+def _finish(cfg, params, h):
+    return L.apply_norm(cfg, params["final_norm"], h)
+
+
+def lm_logits(cfg, params, h, policy):
+    head = {"w": params["w"]} if "w" in params else {}
+    return L.logits(cfg, head, params["embed"], h, policy)

@@ -1,0 +1,55 @@
+"""Serving steps: prefill and single-token decode over a batched KV cache.
+
+The decode path assumes aligned continuous batching (all slots advance one
+position per step — the vLLM-style fixed-step regime); the cache layout and
+sharding come from ``models.model.cache_specs`` (batch over data axes, kv
+heads over model when divisible, sequence over leftover axes => split-KV
+decode for long-context / MQA shapes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill(model, mesh=None):
+    def prefill(params, batch):
+        return model.prefill(params, batch, mesh=mesh)
+
+    return prefill
+
+
+def make_decode_step(model, mesh=None):
+    def decode_step(params, cache, batch, pos):
+        return model.decode_step(params, cache, batch, pos, mesh=mesh)
+
+    return decode_step
+
+
+def greedy_generate(model, params, batch, steps: int, mesh=None, pad_to: int | None = None):
+    """Simple greedy loop for examples/tests: prefill then `steps` decode steps."""
+    cache, lg = model.prefill(params, batch, mesh=mesh)
+    seq = batch["tokens"].shape[1]
+    if pad_to:
+        def pad_seq(x):
+            if x.ndim >= 4 and x.shape[-3] == seq:
+                pad = [(0, 0)] * x.ndim
+                pad[-3] = (0, pad_to - seq)
+                return jnp.pad(x, pad)
+            return x
+
+        cache = jax.tree.map(pad_seq, cache)
+    toks = [jnp.argmax(lg[:, -1], axis=-1)]
+    b = batch["tokens"].shape[0]
+
+    @jax.jit
+    def step(params, cache, db, pos):
+        return model.decode_step(params, cache, db, pos, mesh=mesh)
+
+    for i in range(steps - 1):
+        db = {"tokens": toks[-1][:, None]}
+        if model.cfg.mrope:
+            db["mrope_pos"] = jnp.full((3, b, 1), seq + i, jnp.int32)
+        lg, cache = step(params, cache, db, jnp.int32(seq + i))
+        toks.append(jnp.argmax(lg[:, -1], axis=-1))
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,71 @@
+"""Gradient compression for the cross-pod (DCN) reduction: int8 blockwise
+quantization with error feedback.
+
+The slow link at 1000+-node scale is the pod-to-pod DCN; compressing the
+outer-sync deltas 4× (fp32 -> int8 + fp32 scale per 256-block) with local
+error-feedback accumulators preserves convergence (Seide et al.; 1-bit Adam
+lineage).  Used by train/decoupled.py's outer sync and available for the
+per-step DP all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def compress(x):
+    """fp32 array -> (int8 q, fp32 scales, original shape)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0 + 1e-12
+    q = jnp.round(blocks / scale[:, None]).astype(jnp.int8)
+    return q, scale, x.shape
+
+
+def decompress(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_tree(tree, error_feedback=None):
+    """Returns (compressed tree, new error feedback tree).
+
+    error_feedback: residuals added before quantization and recomputed from
+    the quantization error — the standard EF-SGD trick.
+    """
+    if error_feedback is None:
+        error_feedback = jax.tree.map(jnp.zeros_like, tree)
+
+    def one(x, e):
+        xe = x + e
+        q, s, shp = compress(xe)
+        back = decompress(q, s, shp)
+        return (q, s, shp), xe - back
+
+    flat_x, tdef = jax.tree.flatten(tree)
+    flat_e = jax.tree.leaves(error_feedback)
+    outs = [one(x, e) for x, e in zip(flat_x, flat_e)]
+    comp = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    ef = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return comp, ef
+
+
+def decompress_tree(comp):
+    return jax.tree.map(
+        lambda c: decompress(*c), comp, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+    )
+
+
+def compressed_bytes(tree) -> int:
+    return sum(
+        x.size + 4 * (x.size // BLOCK + 1)
+        for x in jax.tree.leaves(tree)
+    )

@@ -1,0 +1,138 @@
+"""AdamW optimizer, pure-JAX: ZeRO-1 sharded states, optional int8 moments.
+
+ZeRO-1: moment tensors get an *extra* sharding over the ``data`` axis on the
+largest axis the param spec leaves unsharded — optimizer state per chip drops
+by the dp degree, params stay where TP put them.
+
+int8 moments (``moments_dtype=int8``, used by kimi-k2's 1T params): blockwise
+symmetric quantization along the last axis (fp32 scale per row), dequantized
+transiently inside the update — 8-bit Adam with the classic 4 bytes/param
+(bf16 param + 2×int8 moments) footprint instead of 12.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.common import ParamSpec, is_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moments_dtype: Any = jnp.float32
+
+
+def schedule(oc: OptConfig, step):
+    """Linear warmup -> cosine decay."""
+    warm = jnp.minimum(step / max(oc.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - oc.warmup_steps) / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    return oc.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def zero1_pspec(spec: ParamSpec) -> P:
+    """Add 'data' sharding on the largest axis the param pspec leaves free
+    (skipped when the pspec already uses the data axis, e.g. FSDP weights)."""
+    entries = list(spec.pspec) + [None] * (len(spec.shape) - len(spec.pspec))
+    used = {a for e in entries if e is not None for a in (e if isinstance(e, tuple) else (e,))}
+    if "data" in used:
+        return P(*entries)
+    best, best_size = None, 0
+    for i, (e, n) in enumerate(zip(entries, spec.shape)):
+        if e is None and n % 16 == 0 and n > best_size:
+            best, best_size = i, n
+    if best is None:
+        return P(*entries)
+    entries[best] = "data"
+    return P(*entries)
+
+
+def _moment_specs(pspec_tree, oc: OptConfig):
+    def one(s: ParamSpec):
+        zp = zero1_pspec(s)
+        if oc.moments_dtype == jnp.int8:
+            return {
+                "q": ParamSpec(s.shape, jnp.int8, zp, init="zeros"),
+                "scale": ParamSpec(s.shape[:-1], jnp.float32, P(*zp[:-1]), init="zeros"),
+            }
+        return ParamSpec(s.shape, jnp.float32, zp, init="zeros")
+
+    return jax.tree.map(one, pspec_tree, is_leaf=is_spec)
+
+
+def opt_specs(param_specs, oc: OptConfig):
+    return {
+        "m": _moment_specs(param_specs, oc),
+        "v": _moment_specs(param_specs, oc),
+        "step": ParamSpec((), jnp.int32, P(), init="zeros"),
+    }
+
+
+def _is_moment(x):
+    return isinstance(x, dict) and set(x.keys()) == {"q", "scale"}
+
+
+def _dequant(mom):
+    if _is_moment(mom):
+        return mom["q"].astype(jnp.float32) * mom["scale"][..., None]
+    return mom
+
+
+def _requant(val, like):
+    if _is_moment(like):
+        scale = jnp.max(jnp.abs(val), axis=-1) / 127.0 + 1e-12
+        q = jnp.round(val / scale[..., None]).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+    return val
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(oc: OptConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(oc, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, oc.grad_clip / (gnorm + 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _dequant(m)
+        v_f = _dequant(v)
+        m_new = oc.b1 * m_f + (1 - oc.b1) * g
+        v_new = oc.b2 * v_f + (1 - oc.b2) * g * g
+        mhat = m_new / (1 - oc.b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - oc.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, _requant(m_new, m), _requant(v_new, v)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(opt_state["m"], is_leaf=_is_moment)[0]
+    flat_v = jax.tree.flatten(opt_state["v"], is_leaf=_is_moment)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    mdef = jax.tree.structure(opt_state["m"], is_leaf=_is_moment)
+    new_m = jax.tree.unflatten(mdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(mdef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

@@ -1,0 +1,144 @@
+"""Memristor-based CIM-Unit: controller FSM (IDLE→IN→OP→OUT), micro-engine
+register file, and the crossbar calculator (quantized VMM).
+
+The paper's CIM-Unit [13] couples a mixed-signal "calculator" (crossbar +
+DAC/ADC/S+H) with a digital micro-engine.  TPU adaptation (DESIGN.md §2):
+the analog bit-serial crossbar becomes a bit-sliced integer VMM
+(kernels/crossbar_vmm) with identical finite-resolution numerics; the FSM
+timing model is kept:
+
+  IN  cycles = ceil(w · in_res / PORT_BITS)   (input streaming, §III-B)
+  OP  cycles = in_res · OP_CYCLE + ADC_LAT    (bit-serial drive + conversion)
+  OUT cycles = h · out_res / PORT_BITS        (result streaming)
+
+Within a segment step the FSM is event-driven by MMIO messages; the actual
+VMM math of every unit that finished its OP phase during the quantum runs
+*batched at the quantum boundary* (a masked 256×256 matvec per unit) — legal
+because results are only observable after ``busy_until``, and TPU-friendly
+because the "analog" compute becomes one dense batched matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.vp import isa
+
+XBAR = 256  # crossbar dimension (Table II: 256×256)
+PORT_BITS = 32
+OP_CYCLE = 2
+ADC_LAT = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMParams:
+    n_slots: int = 2  # CIM units per segment (Table II: 2 × segment)
+    in_res: int = 8
+    out_res: int = 8
+    w_res: int = 8
+
+
+def cim_state(n_slots: int):
+    z = lambda *s, dt=jnp.int32: jnp.zeros(s, dt)
+    return {
+        "present": jnp.zeros((n_slots,), jnp.bool_),
+        "state": z(n_slots),
+        "rows": z(n_slots),
+        "cols": z(n_slots),
+        "in_res": jnp.full((n_slots,), 8, jnp.int32),
+        "out_res": jnp.full((n_slots,), 8, jnp.int32),
+        "weights": z(n_slots, XBAR, XBAR, dt=jnp.int8),
+        "wrow": z(n_slots),
+        "in_buf": z(n_slots, XBAR),
+        "in_count": z(n_slots),
+        "out_buf": z(n_slots, XBAR),
+        "busy_until": z(n_slots),
+        "op_done_at": jnp.full((n_slots,), -1, jnp.int32),
+        "ops": z(n_slots),
+        # wiring: manager segment + scratch addresses for DMA writeback
+        "mgr_seg": z(n_slots),
+        "flag_addr": z(n_slots),
+        "out_addr": z(n_slots),
+    }
+
+
+def apply_config(cims, u, value, t_now):
+    cims = dict(cims)
+    cims["rows"] = cims["rows"].at[u].set(value & 0x1FF)  # 9 bits: up to 256
+    cims["cols"] = cims["cols"].at[u].set((value >> 9) & 0x1FF)
+    cims["in_res"] = cims["in_res"].at[u].set((value >> 18) & 0xF)
+    cims["out_res"] = cims["out_res"].at[u].set((value >> 22) & 0xF)
+    cims["state"] = cims["state"].at[u].set(isa.CIM_ST_IN)  # ready for input
+    cims["in_count"] = cims["in_count"].at[u].set(0)
+    return cims
+
+
+def apply_input(cims, u, value):
+    cims = dict(cims)
+    idx = cims["in_count"][u]
+    cims["in_buf"] = cims["in_buf"].at[u, jnp.clip(idx, 0, XBAR - 1)].set(value)
+    cims["in_count"] = cims["in_count"].at[u].add(1)
+    return cims
+
+
+def apply_start(cims, u, t_now):
+    """Launch OP: busy_until = now + IN-residual + OP cycles."""
+    cims = dict(cims)
+    w = cims["cols"][u]
+    h = cims["rows"][u]
+    in_cyc = (w * cims["in_res"][u] + PORT_BITS - 1) // PORT_BITS
+    op_cyc = cims["in_res"][u] * OP_CYCLE + ADC_LAT
+    out_cyc = (h * cims["out_res"][u] + PORT_BITS - 1) // PORT_BITS
+    done = t_now + in_cyc + op_cyc + out_cyc
+    cims["state"] = cims["state"].at[u].set(isa.CIM_ST_OP)
+    cims["busy_until"] = cims["busy_until"].at[u].set(done)
+    return cims
+
+
+def crossbar_vmm_ref(weights, x, in_res, out_res):
+    """Quantized crossbar VMM (jnp oracle; the Pallas kernel mirrors this).
+
+    weights int8 (R, C); x int32 (C,) — DAC clamps x to in_res signed bits,
+    analog MAC is exact, ADC saturates the result to out_res+acc headroom.
+    """
+    lo_in = -(1 << (in_res - 1))
+    hi_in = (1 << (in_res - 1)) - 1
+    xq = jnp.clip(x, lo_in, hi_in)
+    acc = weights.astype(jnp.int32) @ xq
+    # ADC with fixed full-scale: saturate to out_res-bit signed range scaled
+    # by the crossbar accumulation headroom (log2(C) extra bits)
+    hi_out = (1 << (out_res - 1 + 8)) - 1
+    return jnp.clip(acc, -hi_out - 1, hi_out)
+
+
+def finish_ops(cims, t_end, use_kernel: bool = False):
+    """Batched quantum-boundary completion: every unit whose OP finishes by
+    t_end computes its VMM and transitions to OUT.  Returns (cims, done_mask).
+    """
+    done = (
+        cims["present"]
+        & (cims["state"] == isa.CIM_ST_OP)
+        & (cims["busy_until"] <= t_end)
+    )
+    if use_kernel:
+        from repro.kernels.crossbar_vmm.ops import crossbar_vmm_batch
+
+        # kernel block shapes specialize on the resolutions (static); the
+        # platform runs the Table II configuration (8-bit I/O)
+        outs = crossbar_vmm_batch(cims["weights"], cims["in_buf"], 8, 8)
+    else:
+        outs = jax.vmap(crossbar_vmm_ref, in_axes=(0, 0, None, None))(
+            cims["weights"], cims["in_buf"], 8, 8
+        )
+    cims = dict(cims)
+    cims["out_buf"] = jnp.where(done[:, None], outs, cims["out_buf"])
+    # outputs ship by DMA in the same boundary step, so OUT completes
+    # immediately and the FSM returns to IDLE (OUT-phase cycles are already
+    # charged inside busy_until)
+    cims["state"] = jnp.where(done, isa.CIM_ST_IDLE, cims["state"])
+    cims["op_done_at"] = jnp.where(done, cims["busy_until"], cims["op_done_at"])
+    cims["ops"] = cims["ops"] + done.astype(jnp.int32)
+    cims["in_count"] = jnp.where(done, 0, cims["in_count"])
+    return cims, done

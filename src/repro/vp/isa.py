@@ -1,0 +1,126 @@
+"""RISC-V RV32IM-subset encodings + the CIM micro-instruction register map.
+
+The VP integrates a SystemC RV64IMAC core in the paper; here we model the
+IM-subset the VMM benchmarks exercise, with *real RISC-V instruction
+encodings* (decode by bit-slicing, exactly what the functional ISS does) and
+a 32-bit datapath (the benchmark arithmetic — int8 activations × int8
+weights accumulated over ≤256 products — fits comfortably; documented
+simplification of the 64-bit register file).
+
+Memory map (word-addressed bus, byte addresses):
+  0x0000_0000 … DRAM (shared main memory, lives in the DRAM segment)
+  0x4000_0000 … CIM unit u at 0x4000_0000 + u*0x1000 (see CIM_* offsets)
+  0x7000_0000 … per-CPU local scratch SRAM
+"""
+from __future__ import annotations
+
+# --- opcode constants (RV32 base) ---
+OP_LUI = 0b0110111
+OP_AUIPC = 0b0010111
+OP_JAL = 0b1101111
+OP_JALR = 0b1100111
+OP_BRANCH = 0b1100011
+OP_LOAD = 0b0000011
+OP_STORE = 0b0100011
+OP_IMM = 0b0010011
+OP_REG = 0b0110011
+
+F3_BEQ, F3_BNE, F3_BLT, F3_BGE = 0b000, 0b001, 0b100, 0b101
+F3_ADDI = 0b000
+F3_ADD = 0b000  # funct7=0 add, 0b0100000 sub, 0b0000001 mul
+F3_LW = 0b010
+F3_SW = 0b010
+F7_MULDIV = 0b0000001
+
+# execution classes (lax.switch indices) produced by the decoder
+(
+    EX_LUI, EX_AUIPC, EX_JAL, EX_JALR, EX_BRANCH, EX_LOAD, EX_STORE,
+    EX_ADDI, EX_ADD, EX_SUB, EX_MUL, EX_ILLEGAL,
+) = range(12)
+
+# --- memory map ---
+DRAM_BASE = 0x0000_0000
+DRAM_WORDS = 1 << 18  # modeled capacity is a VP parameter (128 MB); backing
+                      # store sized to the benchmark working set (1 MiB)
+CIM_BASE = 0x4000_0000
+CIM_STRIDE = 0x1000
+SCRATCH_BASE = 0x7000_0000
+SCRATCH_WORDS = 1 << 16
+
+# CIM register offsets (byte offsets from unit base) — the unit's
+# micro-instruction interface: CONFIG / IN / OP / OUT of the paper's FSM.
+CIM_REG_CONFIG = 0x00  # write: {rows[8:0], cols[17:9], in_res[21:18], out_res[25:22]}
+CIM_REG_WROW = 0x04  # write: select crossbar row for weight loading
+CIM_REG_WDATA = 0x08  # write: next weight word (packs 4 int8 cells)
+CIM_REG_INPUT = 0x0C  # write: next input-vector element (starts IN phase)
+CIM_REG_START = 0x10  # write: launch OP phase
+CIM_REG_STATUS = 0x14  # read: FSM state (0 idle, 1 in, 2 op, 3 out/done)
+CIM_REG_OUTPUT = 0x18  # read: next output element (OUT phase)
+
+CIM_ST_IDLE, CIM_ST_IN, CIM_ST_OP, CIM_ST_OUT = 0, 1, 2, 3
+
+
+def reg(name: str) -> int:
+    """ABI register name -> index."""
+    table = {"zero": 0, "ra": 1, "sp": 2, "gp": 3, "tp": 4}
+    for i in range(3):
+        table[f"t{i}"] = 5 + i
+    table["s0"] = 8
+    table["s1"] = 9
+    for i in range(8):
+        table[f"a{i}"] = 10 + i
+    for i in range(2, 12):
+        table[f"s{i}"] = 16 + i
+    for i in range(3, 7):
+        table[f"t{i}"] = 25 + i
+    return table[name]
+
+
+def _imm_i(imm):
+    return (imm & 0xFFF) << 20
+
+
+def _imm_s(imm):
+    return ((imm >> 5) & 0x7F) << 25 | (imm & 0x1F) << 7
+
+
+def _imm_b(imm):
+    return (
+        ((imm >> 12) & 1) << 31
+        | ((imm >> 5) & 0x3F) << 25
+        | ((imm >> 1) & 0xF) << 8
+        | ((imm >> 11) & 1) << 7
+    )
+
+
+def _imm_j(imm):
+    return (
+        ((imm >> 20) & 1) << 31
+        | ((imm >> 1) & 0x3FF) << 21
+        | ((imm >> 11) & 1) << 20
+        | ((imm >> 12) & 0xFF) << 12
+    )
+
+
+def enc_r(op, rd, f3, rs1, rs2, f7):
+    return f7 << 25 | rs2 << 20 | rs1 << 15 | f3 << 12 | rd << 7 | op
+
+
+def enc_i(op, rd, f3, rs1, imm):
+    return _imm_i(imm) | rs1 << 15 | f3 << 12 | rd << 7 | op
+
+
+def enc_s(op, f3, rs1, rs2, imm):
+    return _imm_s(imm) | rs2 << 20 | rs1 << 15 | f3 << 12 | op
+
+
+def enc_b(op, f3, rs1, rs2, imm):
+    return _imm_b(imm) | rs2 << 20 | rs1 << 15 | f3 << 12 | op
+
+
+def enc_u(op, rd, imm):
+    return (imm & 0xFFFFF000) | rd << 7 | op
+
+
+def enc_j(op, rd, imm):
+    return _imm_j(imm) | rd << 7 | op

@@ -1,0 +1,80 @@
+"""Memory modules: shared DRAM with page-switch / write→read-switch delays
+(after [26] in the paper) and direct-mapped L1 caches.
+
+All state is jnp arrays so segment steps stay vmap/shard_map-able.  The
+modeled DRAM capacity (128 MB, Table II) is a VP parameter; the backing
+store is sized to the benchmark working set (1 MiB of words).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.vp import isa
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """Cycle costs (CPU @1.7 GHz domain, Table II)."""
+
+    cpi: int = 1
+    scratch: int = 1
+    cache_hit: int = 1
+    dram_access: int = 20
+    page_switch: int = 8
+    write_read_switch: int = 3
+    imiss: int = 10
+    mmio_post: int = 1
+    dram_row_bits: int = 9  # words per row = 512
+    dcache_sets: int = 1024  # 32 KB / 32 B lines
+    icache_sets: int = 512  # 16 KB
+    line_words: int = 8
+
+
+def cache_state(n_sets: int):
+    return {
+        "tags": jnp.full((n_sets,), -1, jnp.int32),
+        "hits": jnp.zeros((), jnp.int32),
+        "misses": jnp.zeros((), jnp.int32),
+    }
+
+
+def dram_state(backing_words: int = isa.DRAM_WORDS):
+    return {
+        "data": jnp.zeros((backing_words,), jnp.int32),
+        "last_row": jnp.full((), -1, jnp.int32),
+        "last_write": jnp.zeros((), jnp.bool_),
+        "reads": jnp.zeros((), jnp.int32),
+        "writes": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_lookup(cache, word_addr, t: Timing, pred):
+    """Returns (cache', hit). All mutations are gated on ``pred`` via
+    targeted scatters — never a whole-array select (hot path: runs once per
+    simulated instruction)."""
+    line = word_addr // t.line_words
+    n = cache["tags"].shape[0]
+    s = line % n
+    hit = cache["tags"][s] == line
+    cache = dict(cache)
+    cache["tags"] = cache["tags"].at[s].set(jnp.where(pred, line, cache["tags"][s]))
+    cache["hits"] = cache["hits"] + (pred & hit).astype(jnp.int32)
+    cache["misses"] = cache["misses"] + (pred & ~hit).astype(jnp.int32)
+    return cache, hit
+
+
+def dram_cost(dram, word_addr, is_write, t: Timing, pred):
+    """Returns (dram', cycles) applying row-buffer + wr->rd switch penalties.
+    Scalar state only — gated on ``pred``; never touches the data array."""
+    row = word_addr >> t.dram_row_bits
+    cost = t.dram_access
+    cost = cost + jnp.where(row != dram["last_row"], t.page_switch, 0)
+    cost = cost + jnp.where(dram["last_write"] & ~is_write, t.write_read_switch, 0)
+    dram = dict(dram)
+    dram["last_row"] = jnp.where(pred, row, dram["last_row"])
+    dram["last_write"] = jnp.where(pred, is_write, dram["last_write"])
+    dram["reads"] = dram["reads"] + (pred & ~is_write).astype(jnp.int32)
+    dram["writes"] = dram["writes"] + (pred & is_write).astype(jnp.int32)
+    return dram, cost

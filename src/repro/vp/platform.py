@@ -1,0 +1,375 @@
+"""Virtual-platform assembly: segments of {RISC-V CPU, L1 caches, scratch
+SRAM, shared DRAM, CIM units} + the per-quantum segment step.
+
+The step is a *pure function* ``(seg_state, pending_inbox, quantum_instrs,
+t_limit) → (seg_state', outbox, pending')`` — branchless inside, so the same
+compiled body runs one segment (sequential backend), all segments vectorized
+(vmap) or one-segment-per-device (shard_map).  See core/controller.py.
+
+Flow per quantum (paper Fig. 2/3):
+  1. apply pending inbox messages whose ``t_avail <= local time``
+     (ordered by arrival slot; CIM INPUT streams keep ordering via ranked
+     scatter);
+  2. run up to N instruction slots on the CPU (each costs its modeled
+     cycles; execution gates on ``time < t_limit``, the controller's
+     decoupling bound);
+  3. quantum-boundary CIM completion: every unit whose OP finished computes
+     its crossbar VMM (batched) and DMAs outputs + a done-flag to its
+     manager segment's scratch via channel messages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as ch
+from repro.vp import cim as cim_mod
+from repro.vp import isa, memory, riscv
+
+PROG_WORDS = 512
+OUT_CAP = 4096
+IN_CAP = 4096
+DRAM_BACKING = 1 << 20  # words
+SCRATCH_WORDS = 1 << 12
+
+
+@dataclasses.dataclass(frozen=True)
+class VPConfig:
+    n_segments: int
+    n_cim_slots: int = 2
+    dram_segment: int = 0
+    timing: memory.Timing = memory.Timing()
+    channel_latency: int = 10_000  # cycles; >= quantum (paper's rule)
+    local_latency: int = 64  # intra-segment device message latency
+    use_kernel: bool = False  # crossbar via Pallas kernel vs jnp ref
+    # static wiring: global cim id -> (segment, slot); manager cpu segment
+    cim_seg: tuple = ()
+    cim_slot: tuple = ()
+
+    def latency_matrix(self):
+        s = self.n_segments
+        lat = np.full((s, s), self.channel_latency, np.int32)
+        np.fill_diagonal(lat, self.local_latency)
+        return jnp.asarray(lat)
+
+
+def segment_state(cfg: VPConfig):
+    """One segment's zero state (stack n of these for the simulation)."""
+    return {
+        "time": jnp.zeros((), jnp.int32),
+        "seg_id": jnp.zeros((), jnp.int32),
+        "cpu": riscv.cpu_state(),
+        "prog": jnp.zeros((PROG_WORDS,), jnp.uint32),
+        "icache": memory.cache_state(memory.Timing().icache_sets),
+        "dcache": memory.cache_state(memory.Timing().dcache_sets),
+        "dram": memory.dram_state(DRAM_BACKING),
+        "dram_present": jnp.zeros((), jnp.bool_),
+        "scratch": jnp.zeros((SCRATCH_WORDS,), jnp.int32),
+        "cims": cim_mod.cim_state(cfg.n_cim_slots),
+        "stats": {
+            "instrs": jnp.zeros((), jnp.int32),
+            "msgs": jnp.zeros((), jnp.int32),
+            "txn_hist": jnp.zeros((8,), jnp.int32),  # Fig. 1a trace histogram
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# inbox application
+
+
+def _apply_inbox(cfg: VPConfig, st, pending):
+    """Apply messages with t_avail <= time; return (st, pending', responses)."""
+    t = st["time"]
+    m = pending["valid"] & (pending["t_avail"] <= t)
+    kind, addr, data = pending["kind"], pending["addr"], pending["data"]
+
+    # --- scratch DMA writes (masked lanes scatter out-of-bounds -> dropped;
+    # NEVER write a "dead slot" with the old value: duplicate scatter indices
+    # with different values are nondeterministic in XLA) ---
+    ms = m & (kind == ch.MSG_W_SCRATCH)
+    sc_idx = jnp.clip(addr, 0, SCRATCH_WORDS - 1)
+    scratch = st["scratch"].at[jnp.where(ms, sc_idx, SCRATCH_WORDS)].set(data, mode="drop")
+
+    # --- DRAM posted writes ---
+    md = m & (kind == ch.MSG_W_DRAM) & st["dram_present"]
+    d_idx = jnp.clip(addr, 0, DRAM_BACKING - 1)
+    dram = dict(st["dram"])
+    dram["data"] = dram["data"].at[jnp.where(md, d_idx, DRAM_BACKING)].set(data, mode="drop")
+    dram["writes"] = dram["writes"] + md.sum().astype(jnp.int32)
+
+    # --- CIM register writes (ordered) ---
+    cims = st["cims"]
+    slot = addr >> 16
+    reg = addr & 0xFFFF
+    mc = m & (kind == ch.MSG_W_CIM)
+    # CONFIG: last write wins per slot
+    for u in range(cfg.n_cim_slots):
+        mu = mc & (slot == u)
+        mcfg = mu & (reg == isa.CIM_REG_CONFIG)
+        any_cfg = mcfg.any()
+        val = jnp.max(jnp.where(mcfg, data, -(2**31) + 1))
+        cims = jax.tree.map(lambda x: x, cims)
+        cims = _maybe_config(cims, u, any_cfg, val)
+        # INPUT stream: ranked scatter preserving slot order
+        mi = mu & (reg == isa.CIM_REG_INPUT)
+        rank = jnp.cumsum(mi.astype(jnp.int32)) - 1
+        pos = jnp.clip(cims["in_count"][u] + rank, 0, cim_mod.XBAR - 1)
+        row = cims["in_buf"][u].at[jnp.where(mi, pos, cim_mod.XBAR)].set(data, mode="drop")
+        cims = dict(cims)
+        cims["in_buf"] = cims["in_buf"].at[u].set(row)
+        cims["in_count"] = cims["in_count"].at[u].add(mi.sum().astype(jnp.int32))
+        # weight loading
+        mwr = mu & (reg == isa.CIM_REG_WROW)
+        cims["wrow"] = cims["wrow"].at[u].set(
+            jnp.where(mwr.any(), jnp.max(jnp.where(mwr, data, 0)), cims["wrow"][u])
+        )
+        # START: busy_until from the message's availability time
+        mst = mu & (reg == isa.CIM_REG_START)
+        t_start = jnp.maximum(t, jnp.max(jnp.where(mst, pending["t_avail"], 0)))
+        cims = _maybe_start(cims, u, mst.any(), t_start)
+
+    st = dict(st)
+    st["scratch"] = scratch
+    st["dram"] = dram
+    st["cims"] = cims
+    st["stats"] = dict(st["stats"])
+    st["stats"]["txn_hist"] = st["stats"]["txn_hist"].at[jnp.clip(kind, 0, 7)].add(
+        m.astype(jnp.int32)
+    )
+
+    # --- blocking DRAM read requests: service now, respond via outbox ---
+    responses = {"mask": m & (kind == ch.MSG_R_DRAM) & st["dram_present"],
+                 "addr": d_idx, "tag": data,
+                 "data": st["dram"]["data"][d_idx],
+                 "t_req": pending["t_avail"]}
+
+    # --- read responses: deliver to the waiting CPU (tag = rd register) ---
+    mr = m & (kind == ch.MSG_R_RESP)
+    has_resp = mr.any()
+    resp_val = jnp.max(jnp.where(mr, data, 0))
+    resp_rd = jnp.max(jnp.where(mr, addr, 0))
+    cpu = st["cpu"]
+    cpu = riscv.writeback(cpu, jnp.where(has_resp, resp_rd, 0), resp_val)
+    cpu = dict(cpu)
+    cpu["waiting"] = cpu["waiting"] & ~has_resp
+    st["cpu"] = cpu
+
+    pending = dict(pending)
+    pending["valid"] = pending["valid"] & ~m
+    return st, pending, responses, has_resp
+
+
+def _maybe_config(cims, u, pred, val):
+    new = cim_mod.apply_config(dict(cims), u, val, 0)
+    return jax.tree.map(lambda a, b: jnp.where(pred, b, a), cims, new)
+
+
+def _maybe_start(cims, u, pred, t_start):
+    new = cim_mod.apply_start(dict(cims), u, t_start)
+    return jax.tree.map(lambda a, b: jnp.where(pred, b, a), cims, new)
+
+
+# ---------------------------------------------------------------------------
+# instruction slots
+
+
+STORE_LOG = 2048  # max local-DRAM stores per quantum
+
+
+def _mem_access(cfg: VPConfig, hot, dram_data, outbox, mem):
+    """Dispatch one memory op; returns (hot, outbox, cycles, load_val, stall).
+
+    HOT PATH — runs once per simulated instruction.  ``hot`` carries only
+    small state (cpu, caches, scratch, DRAM scalars, store log); the 4 MB
+    DRAM backing store is a read-only closure (``dram_data``), and local
+    DRAM stores go to a write-log applied at the quantum boundary
+    (posted-write TLM semantics; intra-quantum DRAM load-after-store is not
+    forwarded — the benchmark programs never do it, O is write-only).
+    Keeping big arrays out of the slot-scan carry is what makes the
+    simulator fast: XLA double-buffers carried arrays it cannot alias
+    (2 × 4 MB per instruction in the naive formulation).
+    """
+    t = cfg.timing
+    addr = mem["addr"]
+    widx = (addr >> 2) & (DRAM_BACKING - 1)
+    is_scratch = (addr >= isa.SCRATCH_BASE) & (addr < isa.SCRATCH_BASE + SCRATCH_WORDS * 4)
+    is_cim = (addr >= isa.CIM_BASE) & (addr < isa.SCRATCH_BASE)
+    is_dram = (addr >= 0) & (addr < isa.CIM_BASE)
+    s_idx = jnp.clip((addr - isa.SCRATCH_BASE) >> 2, 0, SCRATCH_WORDS - 1)
+
+    hot = dict(hot)
+    ld = mem["is_load"]
+    sd = mem["is_store"]
+    use_dram_r = ld & is_dram & hot["dram_present"]
+    local_dram_w = sd & is_dram & hot["dram_present"]
+    touch_dram = use_dram_r | local_dram_w
+
+    hot["dcache"], hit = memory.cache_lookup(hot["dcache"], widx, t, touch_dram)
+    hot["dram_meta"], dcost = memory.dram_cost(
+        hot["dram_meta"], widx, local_dram_w, t, touch_dram & ~hit
+    )
+
+    val = jnp.where(is_scratch, hot["scratch"][s_idx], dram_data[widx])
+    cycles = jnp.where(
+        ld,
+        jnp.where(is_scratch, t.scratch,
+                  jnp.where(use_dram_r, jnp.where(hit, t.cache_hit, dcost), t.cpi)),
+        0,
+    )
+
+    # remote DRAM load -> blocking request (tag = seg_id << 8 | rd)
+    remote_ld = ld & is_dram & ~hot["dram_present"]
+    outbox = ch.box_append(
+        outbox, remote_ld, ch.MSG_R_DRAM, cfg.dram_segment, widx,
+        (hot["seg_id"] << 8) | mem["rd"], hot["time"],
+    )
+
+    # stores (targeted scatters; masked ops write a dead slot)
+    local_sc = sd & is_scratch
+    hot["scratch"] = hot["scratch"].at[
+        jnp.where(local_sc, s_idx, SCRATCH_WORDS)
+    ].set(mem["st_data"], mode="drop")
+    log = dict(hot["store_log"])
+    li = jnp.where(local_dram_w, jnp.clip(log["count"], 0, STORE_LOG - 1), STORE_LOG)
+    log["addr"] = log["addr"].at[li].set(widx, mode="drop")
+    log["data"] = log["data"].at[li].set(mem["st_data"], mode="drop")
+    log["count"] = log["count"] + local_dram_w.astype(jnp.int32)
+    hot["store_log"] = log
+    cycles = cycles + jnp.where(
+        sd,
+        jnp.where(is_scratch, t.scratch,
+                  jnp.where(local_dram_w, jnp.where(hit, t.cache_hit, dcost), t.mmio_post)),
+        0,
+    )
+    # remote/posted stores: DRAM (remote) or CIM MMIO
+    remote_st_dram = sd & is_dram & ~hot["dram_present"]
+    outbox = ch.box_append(
+        outbox, remote_st_dram, ch.MSG_W_DRAM, cfg.dram_segment, widx,
+        mem["st_data"], hot["time"],
+    )
+    if len(cfg.cim_seg):
+        u_global = jnp.clip((addr - isa.CIM_BASE) >> 12, 0, max(len(cfg.cim_seg) - 1, 0))
+        reg_off = addr & 0xFFF
+        seg_arr = jnp.asarray(cfg.cim_seg, jnp.int32)
+        slot_arr = jnp.asarray(cfg.cim_slot, jnp.int32)
+        outbox = ch.box_append(
+            outbox, sd & is_cim, ch.MSG_W_CIM, seg_arr[u_global],
+            (slot_arr[u_global] << 16) | reg_off, mem["st_data"], hot["time"],
+        )
+    return hot, outbox, cycles, val, remote_ld
+
+
+def make_segment_step(cfg: VPConfig, quantum: int):
+    """Compile-ready pure step for ONE segment."""
+    t = cfg.timing
+
+    def step(st, pending, t_limit):
+        st, pending, responses, _ = _apply_inbox(cfg, st, pending)
+        outbox = ch.empty_box(OUT_CAP)
+
+        # service queued DRAM read requests -> responses
+        r = responses
+        outbox = ch.box_append_bulk(
+            outbox, r["mask"], ch.MSG_R_RESP,
+            r["tag"] >> 8,          # requester segment travels in the tag
+            r["tag"] & 0xFF,        # rd register index
+            r["data"],
+            jnp.maximum(st["time"], r["t_req"]) + t.dram_access,
+        )
+
+        dram_data = st["dram"]["data"]
+        prog = st["prog"]
+        hot = {
+            "time": st["time"],
+            "seg_id": st["seg_id"],
+            "dram_present": st["dram_present"],
+            "cpu": st["cpu"],
+            "icache": st["icache"],
+            "dcache": st["dcache"],
+            "dram_meta": {k: v for k, v in st["dram"].items() if k != "data"},
+            "scratch": st["scratch"],
+            "stats": st["stats"],
+            "store_log": {
+                "addr": jnp.zeros((STORE_LOG,), jnp.int32),
+                "data": jnp.zeros((STORE_LOG,), jnp.int32),
+                "count": jnp.zeros((), jnp.int32),
+            },
+        }
+
+        def slot(carry, _):
+            hot, outbox = carry
+            cpu = hot["cpu"]
+            runnable = (
+                cpu["present"] & ~cpu["halted"] & ~cpu["waiting"] & (hot["time"] < t_limit)
+            )
+            pc_w = (cpu["pc"] >> 2) & (PROG_WORDS - 1)
+            instr = prog[pc_w]
+            hot = dict(hot)
+            hot["icache"], ihit = memory.cache_lookup(hot["icache"], pc_w, t, runnable)
+            cpu2, mem = riscv.execute(cpu, instr)
+            mem = {k: (v & runnable if v.dtype == jnp.bool_ else v) for k, v in mem.items()}
+            hot, outbox, mcycles, ld_val, stall = _mem_access(cfg, hot, dram_data, outbox, mem)
+            # cpu state is tiny (35 words): whole-select is fine here
+            cpu2 = jax.tree.map(lambda a, b: jnp.where(runnable, b, a), cpu, cpu2)
+            did_load_local = mem["is_load"] & ~stall
+            wb_rd = jnp.where(did_load_local, mem["rd"], 0)
+            cpu2 = riscv.writeback(cpu2, wb_rd, jnp.where(did_load_local, ld_val, cpu2["regs"][0]))
+            cpu2 = dict(cpu2)
+            cpu2["waiting"] = cpu["waiting"] | stall
+            cost = jnp.where(runnable, t.cpi + mcycles + jnp.where(ihit, 0, t.imiss), 1)
+            new_time = jnp.minimum(hot["time"] + cost, t_limit)
+            hot["time"] = jnp.where(cpu["present"] & ~cpu["halted"], new_time, hot["time"])
+            hot["cpu"] = cpu2
+            hot["stats"] = dict(hot["stats"])
+            hot["stats"]["instrs"] = hot["stats"]["instrs"] + runnable.astype(jnp.int32)
+            return (hot, outbox), None
+
+        (hot, outbox), _ = jax.lax.scan(slot, (hot, outbox), None, length=quantum)
+
+        # apply the DRAM store log in order (sequential: duplicate-safe)
+        def apply_store(data, i):
+            valid = i < hot["store_log"]["count"]
+            a = jnp.where(valid, hot["store_log"]["addr"][i], DRAM_BACKING - 1)
+            return data.at[a].set(jnp.where(valid, hot["store_log"]["data"][i], data[a])), None
+
+        dram_data, _ = jax.lax.scan(apply_store, dram_data, jnp.arange(STORE_LOG))
+
+        st = dict(st)
+        st["time"] = hot["time"]
+        st["cpu"] = hot["cpu"]
+        st["icache"] = hot["icache"]
+        st["dcache"] = hot["dcache"]
+        st["scratch"] = hot["scratch"]
+        st["stats"] = hot["stats"]
+        st["dram"] = {**hot["dram_meta"], "data": dram_data}
+
+        # passive segments (no CPU or halted) advance to the decoupling bound
+        passive = ~st["cpu"]["present"] | st["cpu"]["halted"]
+        st["time"] = jnp.where(passive, jnp.maximum(st["time"], t_limit), st["time"])
+
+        # --- CIM completion at the quantum boundary ---
+        cims, done = cim_mod.finish_ops(st["cims"], st["time"], cfg.use_kernel)
+        st["cims"] = cims
+        for u in range(cfg.n_cim_slots):
+            du = done[u]
+            rows = jnp.arange(cim_mod.XBAR)
+            mask_rows = du & (rows < cims["rows"][u])
+            outbox = ch.box_append_bulk(
+                outbox, mask_rows, ch.MSG_W_SCRATCH, cims["mgr_seg"][u],
+                cims["out_addr"][u] + rows, cims["out_buf"][u],
+                jnp.maximum(cims["busy_until"][u], 0),
+            )
+            outbox = ch.box_append(
+                outbox, du, ch.MSG_W_SCRATCH, cims["mgr_seg"][u],
+                cims["flag_addr"][u], jnp.ones((), jnp.int32), cims["busy_until"][u],
+            )
+        st["stats"] = dict(st["stats"])
+        st["stats"]["msgs"] = st["stats"]["msgs"] + outbox["count"]
+        return st, outbox, pending
+
+    return step

@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — the main test process sees the
+single real CPU device; multi-device tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` before importing jax."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 900):
+    """Run a python snippet in a subprocess with N fake devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True, timeout=timeout
+    )
+    assert out.returncode == 0, f"subprocess failed:\nSTDOUT:{out.stdout}\nSTDERR:{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

@@ -1,0 +1,97 @@
+"""Coverage for the remaining substrate: cell bookkeeping, async checkpoint,
+assembler round trips, workload generators, mesh helpers."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, all_cells, get_config, skipped_cells
+
+
+def test_cell_grid_is_complete():
+    """10 archs × 4 shapes = 40 cells: 32 runnable + 8 documented skips."""
+    runnable = all_cells()
+    skips = skipped_cells()
+    assert len(ARCH_IDS) == 10 and len(SHAPES) == 4
+    assert len(runnable) + len(skips) == 40
+    assert len(runnable) == 32
+    skipped = {(a, s) for a, s, _ in skips}
+    assert all(s == "long_500k" for _, s, _ in skips)
+    assert ("falcon-mamba-7b", "long_500k") in runnable
+    assert ("zamba2-2.7b", "long_500k") in runnable
+    assert skipped.isdisjoint(set(runnable))
+
+
+def test_exact_assigned_configs():
+    """Spot-check the assignment table made it into the configs verbatim."""
+    g = get_config("granite-34b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff, g.vocab_size) == (
+        88, 6144, 48, 1, 24576, 49152)
+    k = get_config("kimi-k2-1t-a32b")
+    assert (k.n_layers, k.d_model, k.moe.n_experts, k.moe.top_k, k.vocab_size) == (
+        61, 7168, 384, 8, 163840)
+    z = get_config("zamba2-2.7b")
+    assert (z.n_layers, z.ssm.d_state, z.attn_every) == (54, 64, 6)
+    f = get_config("falcon-mamba-7b")
+    assert (f.n_layers, f.d_model, f.ssm.d_state, f.vocab_size) == (64, 4096, 16, 65024)
+
+
+def test_async_checkpoint(tmp_path):
+    import jax
+
+    from repro.train import checkpoint as ckpt
+
+    tree = {"a": jnp.arange(100.0), "b": {"c": jnp.ones((3, 4))}}
+    t = ckpt.save(tmp_path, 7, tree, async_write=True)
+    t.join(timeout=60)
+    restored, step = ckpt.restore(tmp_path, tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+
+
+def test_assembler_negative_branches_and_loops():
+    from repro.vp.assembler import assemble
+
+    words = assemble(
+        """
+    top:
+        addi t0, t0, 1
+        blt t0, t1, top
+        halt
+        """
+    )
+    assert len(words) == 3
+    # backward branch immediate must be negative (bit 31 set)
+    assert words[1] >> 31 == 1
+
+
+def test_workload_generators_shapes():
+    from repro.vp import workloads as wl
+
+    layer = wl.Layer("x", "y", 10, 8, 3)
+    a, b, o = wl.layer_data(layer)
+    assert a.shape == (10, 8) and b.shape == (8, 3) and o.shape == (10, 3)
+    np.testing.assert_array_equal(o, a @ b)
+    job = wl.cim_workload(layer, [0], {0: (0, 1)})
+    assert 0 in job["programs"] and 0 in job["crossbars"]
+    tiles = wl.from_arch("qwen3-1.7b", max_tiles=3)
+    assert tiles and all(t.h == 256 and t.w == 256 for t in tiles)
+
+
+def test_padded_heads_policy():
+    from repro.configs import get_config
+    from repro.models.layers import padded_heads
+
+    assert padded_heads(get_config("llama4-scout-17b-a16e"), 16) == 48  # 40 -> pad
+    assert padded_heads(get_config("qwen3-1.7b"), 16) == 16  # divisible
+    assert padded_heads(get_config("whisper-tiny"), 16) == 6  # 16/6 > 1.5x: replicate
+    assert padded_heads(get_config("granite-34b"), 16) == 48  # divisible
+
+
+def test_mesh_helpers_shapes():
+    # make_production_mesh needs 256/512 devices — only check the spec here
+    import inspect
+
+    from repro.launch import mesh as M
+
+    src = inspect.getsource(M.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '("pod", "data", "model")' in src

@@ -1,0 +1,88 @@
+"""End-to-end behaviour tests for the paper's system: full VP runs of a
+Table III layer (scaled) in both execution modes, on both segmentations,
+checking architectural results and the headline speedup machinery."""
+import numpy as np
+import pytest
+
+from repro.core import segmentation as sg
+from repro.core.controller import Controller
+from repro.vp import workloads as wl
+
+LAYER = wl.TABLE_III[1].scaled(8)  # Googlenet-conv2 / 8 -> (7, 7, 1)-ish
+
+
+def _final_o(ctl, job, layer):
+    st = ctl.result_states()
+    o = np.asarray(st["dram"]["data"][0][job["o_word"] : job["o_word"] + layer.h * layer.p])
+    return o.reshape(layer.h, layer.p)
+
+
+def test_riscv_mode_uniform():
+    layer = wl.Layer("sys", "riscv", 16, 12, 3)
+    job = wl.riscv_workload(layer)
+    cfg, states, pending = sg.build(
+        sg.uniform(2, 2), programs=job["programs"], dram_words=job["dram"]
+    )
+    ctl = Controller(cfg, states, pending, backend="vmap", quantum=4096)
+    ctl.run(max_rounds=300, check_every=1)
+    np.testing.assert_array_equal(_final_o(ctl, job, layer), job["expected"])
+    stats = ctl.stats()
+    expected_misses = (layer.h * layer.w + layer.w * layer.p + layer.h * layer.p) / 8
+    assert stats["dram"]["reads"].sum() >= expected_misses * 0.5  # compulsory misses
+    assert stats["cache"]["d_hits"].sum() > 0
+
+
+@pytest.mark.parametrize("strategy", ["uniform", "load_oriented"])
+def test_cim_mode_both_segmentations(strategy):
+    layer = wl.Layer("sys", "cim", 20, 16, 6)
+    if strategy == "uniform":
+        descs = sg.uniform(2, 2)
+        mgrs, ids = [0, 1], {0: (0, 1), 1: (2, 3)}
+    else:
+        descs = sg.load_oriented()  # CIMs in segments 2/3, managed by CPU1
+        mgrs, ids = [1], {1: (0, 2)}  # one unit from each CIM segment
+    job = wl.cim_workload(layer, mgr_segments=mgrs, cim_ids_per_mgr=ids,
+                          ordinals=sg.mailbox_ordinals(descs))
+    cfg, states, pending = sg.build(
+        descs, programs=job["programs"], dram_words=job["dram"],
+        crossbars=job["crossbars"], scratch_init=job["scratch"], channel_latency=5000,
+    )
+    ctl = Controller(cfg, states, pending, backend="vmap", quantum=5000)
+    ctl.run(max_rounds=400, check_every=1)
+    np.testing.assert_array_equal(_final_o(ctl, job, layer), job["expected"])
+    assert ctl.stats()["cim_ops"].sum() == layer.p
+
+
+def test_cim_kernel_path_matches_ref_path():
+    """use_kernel=True routes the crossbar math through the Pallas kernel."""
+    layer = wl.Layer("sys", "k", 12, 10, 4)
+    descs = sg.uniform(2, 2)
+    job = wl.cim_workload(layer, mgr_segments=[0, 1], cim_ids_per_mgr={0: (0, 1), 1: (2, 3)})
+    results = []
+    for use_kernel in (False, True):
+        cfg, states, pending = sg.build(
+            descs, programs=job["programs"], dram_words=job["dram"],
+            crossbars=job["crossbars"], scratch_init=job["scratch"],
+            channel_latency=4000, use_kernel=use_kernel,
+        )
+        ctl = Controller(cfg, states, pending, backend="vmap", quantum=4000)
+        ctl.run(max_rounds=300, check_every=1)
+        results.append(_final_o(ctl, job, layer))
+    np.testing.assert_array_equal(results[0], results[1])
+    np.testing.assert_array_equal(results[0], job["expected"])
+
+
+def test_transaction_tracing_histogram():
+    layer = wl.Layer("sys", "tr", 8, 8, 2)
+    descs = sg.load_oriented()
+    job = wl.cim_workload(layer, mgr_segments=[1], cim_ids_per_mgr={1: (0, 2)},
+                          ordinals=sg.mailbox_ordinals(descs))
+    cfg, states, pending = sg.build(
+        descs, programs=job["programs"], dram_words=job["dram"],
+        crossbars=job["crossbars"], scratch_init=job["scratch"], channel_latency=3000,
+    )
+    ctl = Controller(cfg, states, pending, backend="vmap", quantum=3000)
+    ctl.run(max_rounds=300, check_every=1)
+    hist = ctl.stats()["txn_histogram"]
+    # offload traffic: CIM register writes + scratch DMA + posted DRAM writes
+    assert hist[1] > 0 and hist[2] > 0 and hist[0] > 0, hist
