@@ -17,6 +17,7 @@ def main() -> None:
         bench_quantum_sweep,
         bench_roofline,
         bench_segmentation,
+        bench_snn,
         bench_vmm_workloads,
     )
 
@@ -24,6 +25,7 @@ def main() -> None:
         ("Table I  — simulator feature matrix", bench_feature_matrix.main),
         ("Table III / §V-B — VMM workloads (riscv vs cim)", bench_vmm_workloads.main),
         ("Fig. 4c/4d — segmentation speedups (sq vs pll)", bench_segmentation.main),
+        ("SNN — spiking inference, spikes/sec per segmentation", bench_snn.main),
         ("§V-C — quantum-size sweep", bench_quantum_sweep.main),
         ("§Roofline — dry-run derived terms (40 cells)", bench_roofline.main),
     ]

@@ -1,0 +1,49 @@
+"""Version compatibility shims for the JAX APIs this repo leans on.
+
+The production target is a recent JAX (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``); CI containers often carry an older release
+(0.4.x) where those live under ``jax.experimental.shard_map`` / don't exist.
+Everything here degrades to the old spelling with identical semantics so the
+simulator and tests run unchanged on both.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Old JAX has no ambient-mesh concept for jit; entering the Mesh object
+    itself covers the collective-lowering cases this repo uses.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (check_vma off) or the experimental fallback."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)

@@ -24,6 +24,12 @@ MSG_W_CIM = 1  # CIM register write; addr = slot << 16 | reg_offset
 MSG_W_SCRATCH = 2  # DMA write into a segment's scratch SRAM
 MSG_R_DRAM = 3  # blocking read request; data = requesting cpu tag
 MSG_R_RESP = 4  # read response; addr = tag
+MSG_SPIKE = 5  # AER spike event; addr = slot << 16 | axon, data = weight (1)
+               # Unlike MMIO kinds, spikes are NOT applied at arrival time:
+               # the receiving spike-mode CIM unit integrates a spike at its
+               # first tick T with t_avail <= T (vp/platform.py), so delivery
+               # is tick-bucketed and bit-identical under every segmentation
+               # as long as tick_period >= channel latency.
 
 FIELDS = ("kind", "dst", "addr", "data", "t_emit")
 
@@ -125,7 +131,14 @@ def route(outboxes, latency, in_cap: int):
 
 
 def merge_pending(pending, fresh):
-    """Append fresh inbox messages after the surviving pending ones."""
+    """Append fresh inbox messages after the surviving pending ones.
+
+    ``max_count`` is a sticky high-water mark of the capacity the merge
+    *needed* (``fresh["count"]`` carries route-level overflow too): past-cap
+    scatters clip onto the last slot — a documented-nondeterministic
+    overwrite — so the controller raises loudly when the watermark ever
+    exceeds the capacity, even if later rounds drain the box back down.
+    """
     cap = pending["valid"].shape[0]
     packed = pack_pending(pending)
     base = packed["count"]
@@ -137,6 +150,7 @@ def merge_pending(pending, fresh):
         out[f] = packed[f].at[pos].set(fresh[f], mode="drop")
     out["valid"] = packed["valid"].at[pos].set(True, mode="drop")
     out["count"] = base + m.sum().astype(jnp.int32)
+    out["max_count"] = jnp.maximum(pending["max_count"], base + fresh["count"])
     return out
 
 
@@ -144,6 +158,7 @@ def empty_pending(cap: int):
     box = {f: jnp.zeros((cap,), jnp.int32) for f in ("kind", "addr", "data", "t_avail")}
     box["valid"] = jnp.zeros((cap,), jnp.bool_)
     box["count"] = jnp.zeros((), jnp.int32)
+    box["max_count"] = jnp.zeros((), jnp.int32)
     return box
 
 

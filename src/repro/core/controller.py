@@ -124,23 +124,28 @@ class Controller:
                     ]
                     flat_valid = (all_out["valid"] & (all_out["dst"] == i)).reshape(-1)
                     rank = jnp.cumsum(flat_valid.astype(jnp.int32)) - 1
-                    pos = jnp.clip(jnp.where(flat_valid, rank, pf.IN_CAP - 1), 0, pf.IN_CAP - 1)
+                    # dead lanes scatter out-of-bounds and drop (channel.py's
+                    # "never write a dead slot" rule) so an exactly-full
+                    # inbox keeps its last message instead of racing it
+                    # against thousands of zero writes to the same slot
+                    pos = jnp.where(flat_valid, jnp.clip(rank, 0, pf.IN_CAP - 1), pf.IN_CAP)
                     fresh = ch.empty_pending(pf.IN_CAP)
                     for f, src in (("kind", all_out["kind"]), ("addr", all_out["addr"]),
                                    ("data", all_out["data"]), ("t_avail", t_avail)):
-                        fresh[f] = fresh[f].at[pos].set(jnp.where(flat_valid, src.reshape(-1), 0))
-                    fresh["valid"] = fresh["valid"].at[pos].set(flat_valid)
+                        fresh[f] = fresh[f].at[pos].set(src.reshape(-1), mode="drop")
+                    fresh["valid"] = fresh["valid"].at[pos].set(flat_valid, mode="drop")
                     fresh["count"] = flat_valid.sum().astype(jnp.int32)
                     pen = ch.merge_pending(pen, fresh)
                     exp = lambda t: jax.tree.map(lambda x: x[None], t)
                     return exp(st), exp(pen)
 
-                return jax.shard_map(
+                from repro.compat import shard_map
+
+                return shard_map(
                     body,
                     mesh=self.mesh,
                     in_specs=(P("segment"), P("segment")),
                     out_specs=(P("segment"), P("segment")),
-                    check_vma=False,
                 )(states, pending)
 
             self._shard_round = jax.jit(shard_round, donate_argnums=(0, 1))
@@ -186,15 +191,53 @@ class Controller:
             return jax.tree.map(lambda *v: jnp.stack(v), *self._pending_l)
         return self.pending
 
+    def _check_overflow(self, pending=None, states=None):
+        # loud overflow sentinels: merge_pending and the segment step keep
+        # sticky high-water marks of the capacity they needed; past-cap
+        # scatters clip onto the last slot (documented-nondeterministic
+        # overwrite), so any watermark beyond capacity means messages were
+        # silently corrupted at some point — even if the box drained since
+        pending = self._pending_stacked() if pending is None else pending
+        watermark = np.asarray(pending["max_count"])
+        if (watermark > pf.IN_CAP).any():
+            raise RuntimeError(
+                f"pending inbox overflow (watermark {watermark.tolist()} > "
+                f"{pf.IN_CAP}); raise IN_CAP or thin the workload's traffic"
+            )
+        states = self._stacked() if states is None else states
+        out_peak = np.asarray(states["stats"]["outbox_peak"])
+        if (out_peak > pf.OUT_CAP).any():
+            raise RuntimeError(
+                f"outbox overflow (peak {out_peak.tolist()} > {pf.OUT_CAP}); "
+                "raise OUT_CAP or thin the workload's traffic"
+            )
+
     def done(self) -> bool:
         states = self._stacked()
+        pending = self._pending_stacked()
+        self._check_overflow(pending, states)
         cpus = states["cpu"]
         active_cpu = bool(jnp.any(cpus["present"] & ~cpus["halted"]))
         # a unit that is merely armed (CONFIG'd, state IN, no pending input)
         # is not forward progress; only an in-flight OP blocks termination
         busy_cim = bool(jnp.any(states["cims"]["state"] == 2))
-        msgs = bool(jnp.any(self._pending_stacked()["valid"]))
-        return not (active_cpu or busy_cim or msgs)
+        # a spike-mode unit is busy while it has accumulated-but-unintegrated
+        # spikes OR an active neuron already at threshold (possible when a
+        # runtime CIM_REG_MODE write lowers thresh under a charged membrane):
+        # either will change observable state at the unit's next tick.  With
+        # an empty buffer and everyone subthreshold, leak alone can never
+        # cross threshold (leak >= 0, reset-to-zero), so idling is final.
+        # Units that never tick (tick_period == 0, e.g. flipped to spike mode
+        # at runtime without build-time wiring) can never drain — not busy.
+        from repro.vp import isa
+
+        cims = states["cims"]
+        ticking = (cims["mode"] == isa.CIM_MODE_SPIKE) & (cims["tick_period"] > 0)
+        pending_in = (cims["in_buf"] != 0).any(-1)
+        due = ((cims["v"] >= cims["thresh"][..., None]) & (cims["refrac"] == 0)).any(-1)
+        busy_snn = bool(jnp.any(ticking & (pending_in | due)))
+        msgs = bool(jnp.any(pending["valid"]))
+        return not (active_cpu or busy_cim or busy_snn or msgs)
 
     def run(self, max_rounds: int = 10_000, check_every: int = 4):
         """Run to completion; returns (rounds, host_seconds)."""
@@ -203,6 +246,8 @@ class Controller:
             self.round()
             if (r + 1) % check_every == 0 and self.done():
                 break
+        else:
+            self._check_overflow()  # done() may never have seen the last rounds
         jax.block_until_ready(self._states_l if self._list_mode else self.states)
         return self.rounds_run, _time.perf_counter() - t0
 
@@ -230,4 +275,8 @@ class Controller:
                 "writes": np.asarray(states["dram"]["writes"]),
             },
             "cim_ops": np.asarray(states["cims"]["ops"]),
+            "snn": {
+                "spikes": np.asarray(states["cims"]["spikes_total"]),
+                "ticks": np.asarray(states["cims"]["ticks"]),
+            },
         }

@@ -91,14 +91,28 @@ def auto_segmentation(module_costs: dict, n_segments: int):
 
 
 def build(descs, *, programs=None, dram_words=None, crossbars=None,
-          scratch_init=None, channel_latency: int = 10_000, use_kernel: bool = False):
+          scratch_init=None, cim_init=None, channel_latency: int = 10_000,
+          local_latency: int = 64, use_kernel: bool = False):
     """Assemble the stacked simulation state.
 
     programs: {seg_id: asm_source or np.uint32 array}
     dram_words: np.int32 array preloaded at address 0
     crossbars: {global_cim_id: np.int8 (R, C)} preloaded weights
     scratch_init: {seg_id: {word_offset: np.int32 array}}
+    cim_init: {global_cim_id: {field: value}} per-slot CIM state presets —
+        e.g. spike-mode wiring (mode/thresh/leak/tick_period/dst_*, snn/).
+        Preloading state is build-time configuration, like ``crossbars``;
+        runtime reconfiguration goes through the MMIO registers.
     """
+    assert channel_latency >= local_latency, \
+        "intra-segment hops cannot be slower than cross-segment channels"
+    # the SNN bit-exactness guarantee (tick-bucketed AER delivery) requires
+    # every ticking spike-mode unit's tick to cover one channel hop
+    for g, fields in (cim_init or {}).items():
+        if int(fields.get("mode", 0)) == isa.CIM_MODE_SPIKE and \
+                int(fields.get("tick_period", 0)) > 0:
+            assert int(fields["tick_period"]) >= channel_latency, \
+                f"cim {g}: tick_period must be >= channel latency (snn/topology.py)"
     n = len(descs)
     cim_seg, cim_slot, mgr_of = [], [], []
     for s, d in enumerate(descs):
@@ -108,11 +122,17 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
             mgr_of.append(d.cim_mgr if d.cim_mgr >= 0 else s)
     cfg = pf.VPConfig(
         n_segments=n,
+        # size slot state for the densest segment (>= Table II's 2) — a
+        # descriptor exceeding the default would otherwise scatter-clobber
+        n_cim_slots=max([2] + [d.n_cims for d in descs]),
         dram_segment=[i for i, d in enumerate(descs) if d.dram][0] if any(d.dram for d in descs) else 0,
         channel_latency=channel_latency,
+        local_latency=local_latency,
         cim_seg=tuple(cim_seg),
         cim_slot=tuple(cim_slot),
         use_kernel=use_kernel,
+        has_snn=any(int(f.get("mode", 0)) == isa.CIM_MODE_SPIKE
+                    for f in (cim_init or {}).values()),
     )
     states = []
     for s, d in enumerate(descs):
@@ -143,6 +163,8 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
             src = np.asarray(crossbars[g], np.int8)
             w[: src.shape[0], : src.shape[1]] = src
             cims["weights"] = cims["weights"].at[k].set(jnp.asarray(w))
+        for f, val in (cim_init or {}).get(g, {}).items():
+            cims[f] = cims[f].at[k].set(jnp.asarray(val, cims[f].dtype))
         states[s]["cims"] = cims
 
     if dram_words is not None:

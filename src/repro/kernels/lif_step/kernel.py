@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused LIF neuron-pool step.
+
+One program instance owns one unit's (TILE_R)-neuron block: the synaptic
+contraction (spike-count vector × int8 synapse tile) runs on the MXU in
+fp32 (spike counts ≤ fan-in and |w| ≤ 127 keep the accumulator far inside
+fp32's exact-integer range), then leak / threshold / reset / refractory all
+happen element-wise on the VPU without the membrane state ever leaving
+VMEM.  This fusion is the point: the eager formulation materialises three
+(U, R) intermediates per tick; the kernel writes only the new state.
+
+Grid: (units, row_tiles).  Weights arrive pre-transposed (U, C, R) so the
+contraction is a plain (1, C) × (C, TILE_R) dot per block.  Per-unit LIF
+parameters (thresh/leak/refrac_period) ride along as length-1 blocks.
+
+Validated in interpret mode against ref.py (tests/test_snn.py sweeps shapes
+and parameters; int32-exactness makes equality bit-strict).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.lif_step.ref import SPIKE_SAT
+
+TILE_R = 128  # neurons per program (lane-aligned)
+
+
+def _kernel(s_ref, w_ref, v_ref, r_ref, th_ref, lk_ref, rp_ref,
+            vo_ref, ro_ref, so_ref):
+    """s (1, C) int32; w (1, C, TILE_R) int8; v/r (1, TILE_R) int32;
+    th/lk/rp (1,) int32 -> v'/r'/fired (1, TILE_R) int32."""
+    # fan-in saturation (mirrors ref.py): bounds the accumulator inside
+    # fp32's exact-integer range so the MXU contraction never rounds
+    s = jnp.clip(s_ref[...], -SPIKE_SAT, SPIKE_SAT).astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)  # (C, TILE_R)
+    syn = jax.lax.dot(s, w, preferred_element_type=jnp.float32).astype(jnp.int32)
+    v = v_ref[...]
+    refrac = r_ref[...]
+    thresh, leak, rp = th_ref[0], lk_ref[0], rp_ref[0]
+    active = refrac == 0
+    v1 = jnp.maximum(v + jnp.where(active, syn, 0) - leak, 0)
+    fired = active & (v1 >= thresh)
+    vo_ref[...] = jnp.where(fired, 0, v1)
+    ro_ref[...] = jnp.where(fired, rp, jnp.maximum(refrac - 1, 0))
+    so_ref[...] = fired.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lif_step_tiles(weights, spikes, v, refrac, thresh, leak, refrac_period,
+                   interpret: bool = True):
+    """weights (U, R, C) int8; spikes (U, C) int32; v/refrac (U, R) int32;
+    thresh/leak/refrac_period (U,) int32 -> (v', refrac', fired) each (U, R).
+
+    R is padded to the tile multiple; C (the contraction) stays whole — a
+    256-deep fan-in fits VMEM comfortably (256×128 int8 = 32 KB/tile).
+    """
+    u, r, c = weights.shape
+    rp_pad = -(-r // TILE_R) * TILE_R
+    wt = jnp.pad(weights, ((0, 0), (0, rp_pad - r), (0, 0))).transpose(0, 2, 1)  # (U, C, Rp)
+    pad_r = lambda x: jnp.pad(x, ((0, 0), (0, rp_pad - r)))
+    vp, rfp = pad_r(v), pad_r(refrac)
+    # padded neurons must never fire: give the pad lanes an unreachable
+    # threshold by masking v to 0 (thresh >= 1 contract) — v pad is 0 and
+    # syn pad is 0 (zero weights), so fired_pad = (0 >= thresh) = False.
+
+    grid = (u, rp_pad // TILE_R)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, c, TILE_R), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
+            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
+            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
+            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((u, rp_pad), jnp.int32),
+            jax.ShapeDtypeStruct((u, rp_pad), jnp.int32),
+            jax.ShapeDtypeStruct((u, rp_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(spikes, wt, vp, rfp, thresh, leak, refrac_period)
+    return out[0][:, :r], out[1][:, :r], out[2][:, :r]

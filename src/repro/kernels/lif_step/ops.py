@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the fused LIF step kernel.
+
+``interpret=True`` on this CPU container (kernel body executed by the Pallas
+interpreter, semantics identical); on a real TPU deployment flip the flag.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.lif_step.kernel import lif_step_tiles
+
+INTERPRET = True  # CPU container: no TPU lowering available
+
+
+def lif_step_units(weights, spikes, v, refrac, thresh, leak, refrac_period):
+    """Batched over units: weights (U, R, C) int8; spikes (U, C) int32;
+    v/refrac (U, R) int32; thresh/leak/refrac_period (U,) int32
+    -> (v', refrac', fired) each (U, R) int32.
+
+    Used by the spike-mode CIM tick (vp/cim.py) when the platform is built
+    with ``use_kernel=True``.
+    """
+    return lif_step_tiles(weights, spikes, v, refrac, thresh, leak,
+                          refrac_period, interpret=INTERPRET)
+
+
+def lif_step(weights, spikes, v, refrac, thresh, leak, refrac_period):
+    """Single pool: weights (R, C) int8, spikes (C,), v/refrac (R,), scalars."""
+    to1 = lambda x: jnp.asarray(x, jnp.int32)[None]
+    v2, r2, f2 = lif_step_units(
+        weights[None], spikes[None], v[None], refrac[None],
+        to1(thresh), to1(leak), to1(refrac_period),
+    )
+    return v2[0], r2[0], f2[0]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the fused LIF neuron-pool step.
+
+One SNN tick of a crossbar-backed neuron pool (the spike-mode CIM unit's
+"calculator"), fusing four stages that the Pallas kernel executes in one
+VMEM-resident pass:
+
+  1. synaptic accumulation: the int8 synapse matrix (crossbar conductances)
+     contracts the incoming spike-count vector -> per-neuron current;
+  2. leak: subtractive integer leak, membrane floor-clamped at 0
+     (TrueNorth/RANC-style positive-saturating LIF);
+  3. threshold: neurons out of refractory period with v >= thresh fire;
+  4. reset + refractory: fired neurons reset to 0 and load the refractory
+     counter; everyone else's counter decays toward 0.
+
+All arithmetic is int32-exact, so the kernel, this oracle, and the SNN
+subsystem oracle (snn/neuron.py delegates here) are bit-identical — the
+same property tests/test_snn.py asserts across controller backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+SPIKE_SAT = 511  # per-axon per-tick fan-in saturation (9 bits): keeps
+                 # |W·s| <= 256·127·511 < 2^24, so the kernel's fp32 MXU
+                 # contraction stays integer-exact and bit-equal to this
+                 # int32 oracle (the AER analogue of the DAC input clamp)
+
+
+def lif_step(weights, spikes, v, refrac, thresh, leak, refrac_period):
+    """weights int8 (R, C); spikes int32 (C,); v/refrac int32 (R,);
+    thresh/leak/refrac_period int32 scalars -> (v', refrac', fired int32 (R,)).
+    """
+    spikes = jnp.clip(spikes, -SPIKE_SAT, SPIKE_SAT)
+    syn = weights.astype(jnp.int32) @ spikes.astype(jnp.int32)
+    active = refrac == 0
+    v1 = jnp.maximum(v + jnp.where(active, syn, 0) - leak, 0)
+    fired = active & (v1 >= thresh)
+    v_out = jnp.where(fired, 0, v1)
+    refrac_out = jnp.where(fired, refrac_period, jnp.maximum(refrac - 1, 0))
+    return v_out, refrac_out, fired.astype(jnp.int32)
+
+
+def lif_step_units(weights, spikes, v, refrac, thresh, leak, refrac_period):
+    """Batched over units: weights (U, R, C) int8; spikes (U, C) int32;
+    v/refrac (U, R) int32; thresh/leak/refrac_period (U,) int32."""
+    return jax.vmap(lif_step)(weights, spikes, v, refrac, thresh, leak, refrac_period)

@@ -1,0 +1,33 @@
+"""Spiking-neural-network subsystem: the VP's second accelerator
+programming model (event-driven AER spikes vs dense VMM offload).
+
+Module map:
+  neuron.py    — vectorized LIF pool state + the pure tick update (the
+                 single source of LIF semantics, shared with the Pallas
+                 kernel in kernels/lif_step/ and the spike-mode CIM unit)
+  topology.py  — SNN-to-VP mapping: one layer per spike-mode crossbar,
+                 inter-layer AER wiring, placement strategies (uniform /
+                 load_oriented / auto), input-raster injection, readback
+  workloads.py — rate-coded inference jobs + the pure-jnp network oracle
+                 the VP is verified bit-exactly against
+
+Related VP pieces: core/channel.py MSG_SPIKE (tick-bucketed AER events),
+vp/isa.py CIM_REG_MODE, vp/cim.py snn_tick (quantum-boundary LIF
+integration), benchmarks/bench_snn.py (spikes/sec per segmentation).
+"""
+from repro.snn.neuron import LIFParams, lif_step, pool_state
+from repro.snn.topology import (
+    SNNLayer,
+    auto_segmentation_for,
+    build_snn,
+    output_spike_counts,
+    segmentation_for,
+    total_spikes,
+)
+from repro.snn.workloads import (
+    SNNJob,
+    oracle_run,
+    random_snn,
+    rate_encode,
+    snn_inference_job,
+)

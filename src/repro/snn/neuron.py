@@ -1,0 +1,55 @@
+"""Vectorized LIF neuron-pool state + the pure tick update.
+
+A *pool* is one layer's worth of neurons (≤ one crossbar's rows on the VP).
+State is a flat dict of int32 arrays so pools stack/vmap/scan cleanly, and
+the update delegates to the fused-step oracle in ``kernels/lif_step/ref.py``
+— the single definition of LIF semantics that the Pallas kernel, the
+spike-mode CIM unit (vp/cim.py snn_tick) and the pure-jnp network oracle
+(snn/workloads.py) all share.  Everything is integer arithmetic: bit-exact
+equality between the VP simulation and this model is asserted, not approx.
+
+Semantics per tick (positive-saturating LIF, TrueNorth/RANC lineage):
+  v'      = max(v + W·s - leak, 0)        (synaptic charge, subtractive leak)
+  fired   = (refrac == 0) & (v' >= thresh)
+  v''     = 0 where fired                  (reset to rest)
+  refrac' = refrac_period where fired, else max(refrac - 1, 0)
+Neurons inside their refractory window neither integrate nor fire.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.kernels.lif_step import ref as lif_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    thresh: int = 64  # firing threshold (>= 1: termination + pad-lane safety)
+    leak: int = 1  # subtractive leak per tick (>= 0: idle pools stay idle)
+    refrac_period: int = 0  # ticks a neuron is silent after firing
+
+    def __post_init__(self):
+        assert self.thresh >= 1, "thresh must be >= 1"
+        assert self.leak >= 0, "leak must be >= 0 (negative leak never settles)"
+        assert 0 <= self.refrac_period < 16, "refrac packs into 4 register bits"
+
+
+def pool_state(n: int):
+    """Zero membrane state for a pool of ``n`` neurons."""
+    return {
+        "v": jnp.zeros((n,), jnp.int32),
+        "refrac": jnp.zeros((n,), jnp.int32),
+    }
+
+
+def lif_step(state, weights, spikes_in, params: LIFParams):
+    """One tick: (state, int8 (R, C) synapses, int32 (C,) spike counts) ->
+    (state', fired int32 (R,))."""
+    v2, refrac2, fired = lif_ref.lif_step(
+        weights, spikes_in, state["v"], state["refrac"],
+        jnp.int32(params.thresh), jnp.int32(params.leak),
+        jnp.int32(params.refrac_period),
+    )
+    return {"v": v2, "refrac": refrac2}, fired

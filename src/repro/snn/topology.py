@@ -1,0 +1,194 @@
+"""SNN-to-VP mapping: layers onto spike-mode CIM units across segments.
+
+A feed-forward SNN maps one layer per crossbar: the layer's (n_out, n_in)
+int8 synapse matrix becomes the unit's conductances, the layer's neurons
+its rows.  Inter-layer connectivity is pure AER traffic: neuron j of layer
+l firing at tick T becomes a MSG_SPIKE to layer l+1's unit (axon j) with
+t_avail = T + channel latency, integrated at tick T+1 — one tick of axonal
+delay per hop, *independent of placement*, because the builder enforces
+``tick_period >= channel_latency`` (the same inequality the paper demands
+of quantum vs latency).  The last layer is a sink: it counts its own spikes
+instead of emitting events.
+
+Placement strategies mirror the dense-VMM ones (core/segmentation.py):
+``uniform`` spreads one unit per CPU segment, ``load_oriented`` packs units
+into CIM-only segments, ``auto`` greedily balances per-layer synaptic-op
+costs.  The whole network needs no CPU programs — every CPU halts at t=0
+and the simulation is driven entirely by the event machinery, which is
+exactly what makes SNNs the stress test for segmentation choices.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import segmentation as sg
+from repro.vp import isa, platform as pf
+from repro.snn.neuron import LIFParams
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNLayer:
+    weights: np.ndarray  # int8 (n_out, n_in) synapse matrix
+    params: LIFParams = LIFParams()
+
+    @property
+    def n_out(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def n_in(self) -> int:
+        return self.weights.shape[1]
+
+
+def segmentation_for(n_layers: int, strategy: str, n_segments: int = 4):
+    """Segment descriptors with >= n_layers CIM units under ``strategy``."""
+    if strategy == "uniform":
+        per = -(-n_layers // n_segments)
+        descs = sg.uniform(n_cpus=n_segments, cims_per_cpu=per)
+    elif strategy == "load_oriented":
+        n_cim_segs = max(n_segments - 2, 1)
+        per = -(-n_layers // n_cim_segs)
+        descs = [sg.SegmentDesc(cpu=True, dram=True), sg.SegmentDesc(cpu=True)]
+        descs += [sg.SegmentDesc(n_cims=per, cim_mgr=1) for _ in range(n_cim_segs)]
+    elif strategy == "auto":
+        raise ValueError("use auto_segmentation_for(layers, n_segments)")
+    else:
+        raise ValueError(strategy)
+    assert sum(d.n_cims for d in descs) >= n_layers
+    return descs
+
+
+def auto_segmentation_for(layers, n_segments: int = 4, slots_per_seg: int = 2):
+    """Greedy balanced placement over per-layer synaptic-op costs.
+
+    Returns (descs, placement): longest-processing-time assignment of
+    layers to segments (respecting the per-segment slot cap), plus the
+    layer -> global-unit map that keeps the assignment — without it a
+    cost-sorted greedy pass balances *units* while the layers land on
+    them in chain order, which can be maximally imbalanced.
+    """
+    costs = [float(l.n_out * l.n_in) for l in layers]
+    order = sorted(range(len(layers)), key=lambda i: -costs[i])
+    n_seg = max(1, min(n_segments, len(layers)))
+    assert n_seg * slots_per_seg >= len(layers), "not enough slots"
+    loads = [0.0] * n_seg
+    assign: list[list[int]] = [[] for _ in range(n_seg)]
+    for i in order:
+        open_segs = [s for s in range(n_seg) if len(assign[s]) < slots_per_seg]
+        s = min(open_segs, key=lambda s: loads[s])
+        assign[s].append(i)
+        loads[s] += costs[i]
+    descs, placement = [], {}
+    g = 0
+    for s in range(n_seg):
+        descs.append(sg.SegmentDesc(cpu=(s == 0), dram=(s == 0),
+                                    n_cims=len(assign[s]), cim_mgr=0))
+        for layer_idx in assign[s]:
+            placement[layer_idx] = g
+            g += 1
+    return descs, [placement[i] for i in range(len(layers))]
+
+
+def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_000,
+              channel_latency: int = 10_000, local_latency: int = 64,
+              use_kernel: bool = False):
+    """Assemble a runnable SNN simulation.
+
+    layers: [SNNLayer, ...] feed-forward chain
+    descs: segment descriptors (segmentation_for / auto_segmentation_for)
+    placement: layer index -> global CIM unit id (default: layer i on
+        unit i; auto_segmentation_for returns the cost-balanced map)
+    raster: int (T, n_in) input spike counts; timestep k is integrated at
+        layer 0's tick k (injected as pre-scheduled AER events)
+    Returns (cfg, states, pending, meta) ready for the Controller; meta
+    locates the output unit for spike-count readback.
+    """
+    assert tick_period >= channel_latency >= local_latency, \
+        "spike delivery must land within one tick under any placement"
+    n_layers = len(layers)
+    cim_seg, cim_slot = [], []
+    for s, d in enumerate(descs):
+        for k in range(d.n_cims):
+            cim_seg.append(s)
+            cim_slot.append(k)
+    assert len(cim_seg) >= n_layers, "not enough CIM units for the layers"
+    placement = list(placement) if placement is not None else list(range(n_layers))
+    assert len(placement) == n_layers and len(set(placement)) == n_layers
+    for i in range(1, n_layers):
+        assert layers[i].n_in == layers[i - 1].n_out, "layer chain mismatch"
+
+    crossbars = {placement[i]: np.asarray(l.weights, np.int8)
+                 for i, l in enumerate(layers)}
+    cim_init = {}
+    for i, l in enumerate(layers):
+        p = l.params
+        g, g_next = placement[i], placement[i + 1] if i + 1 < n_layers else -1
+        cim_init[g] = {
+            "mode": isa.CIM_MODE_SPIKE,
+            "rows": l.n_out,
+            "cols": l.n_in,
+            "thresh": p.thresh,
+            "leak": p.leak,
+            "refrac_period": p.refrac_period,
+            "tick_period": tick_period,
+            "next_tick": tick_period,  # global tick grid: P_k = (k+1)·period
+            "dst_seg": cim_seg[g_next] if g_next >= 0 else -1,
+            "dst_slot": cim_slot[g_next] if g_next >= 0 else 0,
+            "axon_base": 0,
+        }
+    cfg, states, pending = sg.build(
+        descs, crossbars=crossbars, cim_init=cim_init,
+        channel_latency=channel_latency, local_latency=local_latency,
+        use_kernel=use_kernel,
+    )
+    g0, g_out = placement[0], placement[-1]
+    pending = _inject_raster(pending, cfg.n_segments, cim_seg[g0], cim_slot[g0],
+                             raster, tick_period)
+    meta = {
+        "in_unit": (cim_seg[g0], cim_slot[g0]),
+        "out_unit": (cim_seg[g_out], cim_slot[g_out]),
+        "n_out": layers[-1].n_out,
+        "unit_of_layer": [(cim_seg[placement[i]], cim_slot[placement[i]])
+                          for i in range(n_layers)],
+    }
+    return cfg, states, pending, meta
+
+
+def _inject_raster(pending, n_segments, seg0, slot0, raster, tick_period):
+    """Pre-schedule the input spike train as AER events in seg0's inbox."""
+    raster = np.asarray(raster)
+    ts, axons = np.nonzero(raster)
+    n = len(ts)
+    assert n <= pf.IN_CAP // 2, \
+        f"{n} input events overflow the inbox; shorten or thin the raster"
+    boxes = {f: np.zeros((n_segments, pf.IN_CAP), np.int32)
+             for f in ("kind", "addr", "data", "t_avail")}
+    from repro.core import channel as ch
+    boxes["kind"][seg0, :n] = ch.MSG_SPIKE
+    boxes["addr"][seg0, :n] = (slot0 << 16) | axons
+    boxes["data"][seg0, :n] = raster[ts, axons]
+    boxes["t_avail"][seg0, :n] = (ts + 1) * tick_period
+    valid = np.zeros((n_segments, pf.IN_CAP), bool)
+    valid[seg0, :n] = True
+    count = np.zeros((n_segments,), np.int32)
+    count[seg0] = n
+    out = {f: jnp.asarray(v) for f, v in boxes.items()}
+    out["valid"] = jnp.asarray(valid)
+    out["count"] = jnp.asarray(count)
+    out["max_count"] = jnp.asarray(count)
+    return jax.tree.map(lambda a, b: b, pending, out)
+
+
+def output_spike_counts(states, meta) -> np.ndarray:
+    """Per-neuron emitted-spike counts of the output layer."""
+    s, k = meta["out_unit"]
+    return np.asarray(states["cims"]["spike_counts"][s, k, : meta["n_out"]])
+
+
+def total_spikes(states) -> int:
+    """All spikes emitted by every unit over the whole run."""
+    return int(np.asarray(states["cims"]["spikes_total"]).sum())

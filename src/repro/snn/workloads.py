@@ -1,0 +1,86 @@
+"""SNN benchmark workloads: rate-coded multi-layer LIF inference jobs +
+the pure-jnp network oracle the VP simulation is verified against.
+
+Timing contract shared with the VP mapping (snn/topology.py): one tick of
+axonal delay per layer hop.  Input timestep k is integrated by layer 0 at
+tick k; layer l's spikes from tick j reach layer l+1 at tick j+1.  The
+oracle simulates T + L + 1 ticks — after the input ends, a layer can never
+fire again once its upstream goes quiet (leak >= 0 + reset-to-zero), so
+output spike *counts* are exact regardless of when the event-driven VP run
+terminates.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.snn.neuron import LIFParams, lif_step, pool_state
+from repro.snn.topology import SNNLayer
+
+
+def rate_encode(x, t_steps: int, seed: int = 0):
+    """Rates x in [0, 1]^n -> Bernoulli spike raster, int (T, n)."""
+    rng = np.random.default_rng(seed)
+    x = np.clip(np.asarray(x, np.float64), 0.0, 1.0)
+    return (rng.random((t_steps, x.shape[0])) < x).astype(np.int32)
+
+
+def random_snn(layer_sizes=(64, 48, 10), seed: int = 0, w_lo: int = -4, w_hi: int = 8):
+    """Feed-forward LIF chain with positive-biased random int8 synapses.
+
+    Thresholds scale with fan-in so mid-rate input keeps every layer
+    spiking (the traffic, not the task, is what the VP benchmarks need).
+    """
+    rng = np.random.default_rng(seed)
+    layers = []
+    for n_in, n_out in zip(layer_sizes[:-1], layer_sizes[1:]):
+        w = rng.integers(w_lo, w_hi, (n_out, n_in)).astype(np.int8)
+        layers.append(SNNLayer(w, LIFParams(thresh=max(n_in, 1), leak=1)))
+    return layers
+
+
+def oracle_run(layers, raster):
+    """Pure-jnp reference simulation; returns (output_counts, per_layer_totals)."""
+    import jax.numpy as jnp
+
+    t_steps, n_in = raster.shape
+    n_layers = len(layers)
+    assert layers[0].n_in == n_in
+    states = [pool_state(l.n_out) for l in layers]
+    prev = [jnp.zeros((l.n_out,), jnp.int32) for l in layers]
+    counts = jnp.zeros((layers[-1].n_out,), jnp.int32)
+    totals = np.zeros(n_layers, np.int64)
+    zero_in = jnp.zeros((n_in,), jnp.int32)
+    for j in range(t_steps + n_layers + 1):
+        feeds = [jnp.asarray(raster[j], jnp.int32) if j < t_steps else zero_in]
+        feeds += prev[:-1]
+        new_prev = []
+        for l, layer in enumerate(layers):
+            states[l], fired = lif_step(
+                states[l], jnp.asarray(layer.weights), feeds[l], layer.params
+            )
+            new_prev.append(fired)
+            totals[l] += int(fired.sum())
+        prev = new_prev
+        counts = counts + prev[-1]
+    return np.asarray(counts), totals
+
+
+@dataclasses.dataclass
+class SNNJob:
+    layers: list
+    raster: np.ndarray
+    expected_counts: np.ndarray  # oracle output spike counts
+    expected_total: int  # oracle all-layer spike total
+
+
+def snn_inference_job(layer_sizes=(64, 48, 10), t_steps: int = 12,
+                      rate: float = 0.5, seed: int = 0) -> SNNJob:
+    """Rate-coded inference job: random input rates -> raster -> oracle."""
+    rng = np.random.default_rng(seed + 1)
+    layers = random_snn(layer_sizes, seed=seed)
+    x = rng.random(layer_sizes[0]) * rate * 2
+    raster = rate_encode(x, t_steps, seed=seed + 2)
+    counts, totals = oracle_run(layers, raster)
+    return SNNJob(layers, raster, counts, int(totals.sum()))

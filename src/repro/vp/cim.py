@@ -61,6 +61,23 @@ def cim_state(n_slots: int):
         "mgr_seg": z(n_slots),
         "flag_addr": z(n_slots),
         "out_addr": z(n_slots),
+        # --- spike (LIF) mode: crossbar as synapse matrix (snn/) ---
+        # in_buf doubles as the per-tick spike-count accumulator; rows/cols
+        # are neuron/axon counts; weights are the synapse conductances.
+        "mode": z(n_slots),  # isa.CIM_MODE_DENSE / CIM_MODE_SPIKE
+        "v": z(n_slots, XBAR),  # membrane potentials
+        "refrac": z(n_slots, XBAR),  # refractory countdown per neuron
+        "thresh": jnp.ones((n_slots,), jnp.int32),
+        "leak": z(n_slots),
+        "refrac_period": z(n_slots),
+        "tick_period": z(n_slots),  # SNN tick pitch (0 = never ticks)
+        "next_tick": z(n_slots),  # sim time of the next scheduled tick
+        "dst_seg": jnp.full((n_slots,), -1, jnp.int32),  # -1 = sink (count only)
+        "dst_slot": z(n_slots),
+        "axon_base": z(n_slots),  # dst axon = axon_base + neuron index
+        "spike_counts": z(n_slots, XBAR),  # emitted spikes per neuron
+        "spikes_total": z(n_slots),
+        "ticks": z(n_slots),
     }
 
 
@@ -72,6 +89,16 @@ def apply_config(cims, u, value, t_now):
     cims["out_res"] = cims["out_res"].at[u].set((value >> 22) & 0xF)
     cims["state"] = cims["state"].at[u].set(isa.CIM_ST_IN)  # ready for input
     cims["in_count"] = cims["in_count"].at[u].set(0)
+    return cims
+
+
+def apply_mode(cims, u, value):
+    """CIM_REG_MODE write: {mode[0], thresh[16:1], leak[24:17], refrac[28:25]}."""
+    cims = dict(cims)
+    cims["mode"] = cims["mode"].at[u].set(value & 1)
+    cims["thresh"] = cims["thresh"].at[u].set(jnp.maximum((value >> 1) & 0xFFFF, 1))
+    cims["leak"] = cims["leak"].at[u].set((value >> 17) & 0xFF)
+    cims["refrac_period"] = cims["refrac_period"].at[u].set((value >> 25) & 0xF)
     return cims
 
 
@@ -142,3 +169,51 @@ def finish_ops(cims, t_end, use_kernel: bool = False):
     cims["ops"] = cims["ops"] + done.astype(jnp.int32)
     cims["in_count"] = jnp.where(done, 0, cims["in_count"])
     return cims, done
+
+
+def snn_tick(cims, t_gate, use_kernel: bool = False):
+    """Quantum-boundary LIF tick for spike-mode units (snn/ subsystem).
+
+    A unit fires its tick at scheduled time T = ``next_tick`` once
+    ``t_gate`` (the segment time at which this round's inbox was applied)
+    has passed T + tick_period.  That one-period guard makes tick-k firing
+    wait until every peer has certifiably emitted its tick-(k-1) spikes:
+    the controller's decoupling bound gives t_peer >= t_gate - latency >=
+    T + tick_period - latency >= T (builder contract: tick_period >=
+    channel latency), and an emitted spike needs exactly one routing round
+    to reach pending.  One tick per quantum; segment time advances at most
+    one channel latency per round (monotone min-peer bound), so ticks are
+    never skipped.  Bit-identical across all controller backends and all
+    segmentations by construction.
+
+    Returns (cims', fired_rows bool (U, XBAR), fired bool (U,),
+    tick_time (U,)) — the platform turns fired rows into AER MSG_SPIKE
+    events (or spike_counts for sink units) stamped at the tick time.
+    """
+    fire = (
+        cims["present"]
+        & (cims["mode"] == isa.CIM_MODE_SPIKE)
+        & (cims["tick_period"] > 0)
+        & (t_gate >= cims["next_tick"] + cims["tick_period"])
+    )
+    if use_kernel:
+        from repro.kernels.lif_step.ops import lif_step_units
+    else:
+        from repro.kernels.lif_step.ref import lif_step_units
+    v2, refrac2, fired_i = lif_step_units(
+        cims["weights"], cims["in_buf"], cims["v"], cims["refrac"],
+        cims["thresh"], cims["leak"], cims["refrac_period"],
+    )
+    rows_idx = jnp.arange(XBAR)
+    fired_rows = fire[:, None] & (fired_i != 0) & (rows_idx[None, :] < cims["rows"][:, None])
+    cims = dict(cims)
+    sel = lambda new, old: jnp.where(fire[:, None], new, old)
+    cims["v"] = sel(v2, cims["v"])
+    cims["refrac"] = sel(refrac2, cims["refrac"])
+    cims["in_buf"] = jnp.where(fire[:, None], 0, cims["in_buf"])
+    tick_time = cims["next_tick"]
+    cims["next_tick"] = cims["next_tick"] + jnp.where(fire, cims["tick_period"], 0)
+    cims["spike_counts"] = cims["spike_counts"] + fired_rows.astype(jnp.int32)
+    cims["spikes_total"] = cims["spikes_total"] + fired_rows.sum(-1).astype(jnp.int32)
+    cims["ticks"] = cims["ticks"] + fire.astype(jnp.int32)
+    return cims, fired_rows, fire, tick_time

@@ -56,8 +56,22 @@ CIM_REG_INPUT = 0x0C  # write: next input-vector element (starts IN phase)
 CIM_REG_START = 0x10  # write: launch OP phase
 CIM_REG_STATUS = 0x14  # read: FSM state (0 idle, 1 in, 2 op, 3 out/done)
 CIM_REG_OUTPUT = 0x18  # read: next output element (OUT phase)
+CIM_REG_MODE = 0x1C  # write: {mode[0], thresh[16:1], leak[24:17], refrac[28:25]}
+                     # mode 0 = dense VMM FSM, 1 = spiking (LIF) — the crossbar
+                     # becomes a synapse matrix integrating AER spike events.
+                     # The register tunes neuron parameters at runtime; tick
+                     # scheduling + spike routing (tick_period, dst_*) are
+                     # build-time wiring like mgr_seg (segmentation cim_init),
+                     # and spikes sent to a unit that never ticks are dropped.
 
 CIM_ST_IDLE, CIM_ST_IN, CIM_ST_OP, CIM_ST_OUT = 0, 1, 2, 3
+
+CIM_MODE_DENSE, CIM_MODE_SPIKE = 0, 1
+
+
+def pack_mode(mode: int, thresh: int = 1, leak: int = 0, refrac: int = 0) -> int:
+    """Encode a CIM_REG_MODE register value."""
+    return (mode & 1) | (thresh & 0xFFFF) << 1 | (leak & 0xFF) << 17 | (refrac & 0xF) << 25
 
 
 def reg(name: str) -> int:

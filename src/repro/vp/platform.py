@@ -46,6 +46,9 @@ class VPConfig:
     channel_latency: int = 10_000  # cycles; >= quantum (paper's rule)
     local_latency: int = 64  # intra-segment device message latency
     use_kernel: bool = False  # crossbar via Pallas kernel vs jnp ref
+    has_snn: bool = False  # any spike-mode unit wired at build time; gates
+                           # the per-quantum LIF tick so dense-only builds
+                           # never pay the batched synapse contraction
     # static wiring: global cim id -> (segment, slot); manager cpu segment
     cim_seg: tuple = ()
     cim_slot: tuple = ()
@@ -73,6 +76,7 @@ def segment_state(cfg: VPConfig):
         "stats": {
             "instrs": jnp.zeros((), jnp.int32),
             "msgs": jnp.zeros((), jnp.int32),
+            "outbox_peak": jnp.zeros((), jnp.int32),  # overflow sentinel
             "txn_hist": jnp.zeros((8,), jnp.int32),  # Fig. 1a trace histogram
         },
     }
@@ -83,10 +87,21 @@ def segment_state(cfg: VPConfig):
 
 
 def _apply_inbox(cfg: VPConfig, st, pending):
-    """Apply messages with t_avail <= time; return (st, pending', responses)."""
+    """Apply messages with t_avail <= time; return (st, pending', responses).
+
+    AER spikes (MSG_SPIKE) are the exception to the arrival-time rule: a
+    spike addressed to slot u integrates at u's next tick, so it is
+    consumed when ``t_avail <= next_tick[u]`` — possibly before local time
+    reaches t_avail, never after the tick it belongs to.  Spikes for later
+    ticks stay pending.
+    """
     t = st["time"]
-    m = pending["valid"] & (pending["t_avail"] <= t)
     kind, addr, data = pending["kind"], pending["addr"], pending["data"]
+    m = pending["valid"] & (pending["t_avail"] <= t)
+    if cfg.has_snn:
+        m = m & (kind != ch.MSG_SPIKE)
+    # else: no spike-mode units exist, so any stray MSG_SPIKE just drains
+    # through m (no handler matches kind 5) instead of pending forever
 
     # --- scratch DMA writes (masked lanes scatter out-of-bounds -> dropped;
     # NEVER write a "dead slot" with the old value: duplicate scatter indices
@@ -132,6 +147,38 @@ def _apply_inbox(cfg: VPConfig, st, pending):
         mst = mu & (reg == isa.CIM_REG_START)
         t_start = jnp.maximum(t, jnp.max(jnp.where(mst, pending["t_avail"], 0)))
         cims = _maybe_start(cims, u, mst.any(), t_start)
+        # MODE: switch dense VMM <-> spiking LIF (largest value wins within
+        # one inbox round, same resolution rule as CIM_REG_CONFIG above)
+        mmd = mu & (reg == isa.CIM_REG_MODE)
+        cims = _maybe_mode(cims, u, mmd.any(), jnp.max(jnp.where(mmd, data, 0)))
+
+    # --- AER spikes: accumulate into each spike-mode unit's tick buffer ---
+    spk_applied = jnp.zeros_like(m)
+    if cfg.has_snn:
+        spk = pending["valid"] & (kind == ch.MSG_SPIKE)
+        slot_s = addr >> 16
+        axon = addr & 0xFFFF
+        # spikes a unit can never integrate — slot out of range, unit not in
+        # spike mode, or never ticking (tick_period == 0) — are consumed and
+        # dropped like real AER fabrics drop events addressed to
+        # unconfigured cores; left pending they would wedge termination.
+        # Out-of-range axons drop via the scatter, the event still consumes.
+        spk_applied = spk_applied | (spk & (slot_s >= cfg.n_cim_slots))
+        for u in range(cfg.n_cim_slots):
+            eligible = (cims["tick_period"][u] > 0) & (
+                cims["mode"][u] == isa.CIM_MODE_SPIKE
+            )
+            msu = spk & (slot_s == u) & (pending["t_avail"] <= cims["next_tick"][u]) & eligible
+            # only drop once the event has actually arrived in local time:
+            # a future spike racing a runtime eligibility change must wait
+            # for the reconfiguration to apply, not vanish early
+            mdrop = spk & (slot_s == u) & ~eligible & (pending["t_avail"] <= t)
+            row = cims["in_buf"][u].at[
+                jnp.where(msu & (axon < cim_mod.XBAR), axon, cim_mod.XBAR)
+            ].add(jnp.where(msu, data, 0), mode="drop")
+            cims = dict(cims)
+            cims["in_buf"] = cims["in_buf"].at[u].set(row)
+            spk_applied = spk_applied | msu | mdrop
 
     st = dict(st)
     st["scratch"] = scratch
@@ -139,7 +186,7 @@ def _apply_inbox(cfg: VPConfig, st, pending):
     st["cims"] = cims
     st["stats"] = dict(st["stats"])
     st["stats"]["txn_hist"] = st["stats"]["txn_hist"].at[jnp.clip(kind, 0, 7)].add(
-        m.astype(jnp.int32)
+        (m | spk_applied).astype(jnp.int32)
     )
 
     # --- blocking DRAM read requests: service now, respond via outbox ---
@@ -160,12 +207,17 @@ def _apply_inbox(cfg: VPConfig, st, pending):
     st["cpu"] = cpu
 
     pending = dict(pending)
-    pending["valid"] = pending["valid"] & ~m
+    pending["valid"] = pending["valid"] & ~m & ~spk_applied
     return st, pending, responses, has_resp
 
 
 def _maybe_config(cims, u, pred, val):
     new = cim_mod.apply_config(dict(cims), u, val, 0)
+    return jax.tree.map(lambda a, b: jnp.where(pred, b, a), cims, new)
+
+
+def _maybe_mode(cims, u, pred, val):
+    new = cim_mod.apply_mode(dict(cims), u, val)
     return jax.tree.map(lambda a, b: jnp.where(pred, b, a), cims, new)
 
 
@@ -269,6 +321,7 @@ def make_segment_step(cfg: VPConfig, quantum: int):
     t = cfg.timing
 
     def step(st, pending, t_limit):
+        t_inbox = st["time"]  # the SNN tick gate: time the inbox was applied at
         st, pending, responses, _ = _apply_inbox(cfg, st, pending)
         outbox = ch.empty_box(OUT_CAP)
 
@@ -368,8 +421,31 @@ def make_segment_step(cfg: VPConfig, quantum: int):
                 outbox, du, ch.MSG_W_SCRATCH, cims["mgr_seg"][u],
                 cims["flag_addr"][u], jnp.ones((), jnp.int32), cims["busy_until"][u],
             )
+
+        # --- SNN tick at the quantum boundary: LIF integration + AER out ---
+        if cfg.has_snn:
+            cims, fired_rows, _, tick_time = cim_mod.snn_tick(
+                st["cims"], t_inbox, cfg.use_kernel
+            )
+            st["cims"] = cims
+            rows = jnp.arange(cim_mod.XBAR)
+            for u in range(cfg.n_cim_slots):
+                # axons past the 16-bit AER field would carry into the slot
+                # bits and misroute; drop them at the source instead
+                dst_axon = cims["axon_base"][u] + rows
+                emit = fired_rows[u] & (cims["dst_seg"][u] >= 0) & (dst_axon < (1 << 16))
+                outbox = ch.box_append_bulk(
+                    outbox, emit, ch.MSG_SPIKE, cims["dst_seg"][u],
+                    (cims["dst_slot"][u] << 16) | dst_axon,
+                    jnp.ones((), jnp.int32), tick_time[u],
+                )
         st["stats"] = dict(st["stats"])
         st["stats"]["msgs"] = st["stats"]["msgs"] + outbox["count"]
+        # sticky watermark: box_append* clips past-capacity appends onto the
+        # last slot, so a peak beyond OUT_CAP means emitted messages (e.g. a
+        # wide SNN tick's AER burst) were silently lost — checked loudly by
+        # the controller alongside the inbox watermark
+        st["stats"]["outbox_peak"] = jnp.maximum(st["stats"]["outbox_peak"], outbox["count"])
         return st, outbox, pending
 
     return step

@@ -13,6 +13,7 @@ def test_moe_ep_matches_dense(subproc):
     subproc(
         """
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs import get_smoke_config
 from repro.models.moe import apply_moe, moe_specs
 from repro.common import init_params
@@ -20,13 +21,12 @@ import dataclasses
 
 cfg = get_smoke_config("kimi-k2-1t-a32b")
 cfg = dataclasses.replace(cfg, d_model=64)
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 specs = moe_specs(cfg, tp=2)
 params = init_params(jax.random.PRNGKey(0), specs)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 64), jnp.float32)
 y_dense, aux_d = apply_moe(cfg, params, x, __import__("repro.common", fromlist=["DTypePolicy"]).DTypePolicy(), mesh=None)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     y_ep, aux_e = jax.jit(lambda p, x: apply_moe(cfg, p, x,
         __import__("repro.common", fromlist=["DTypePolicy"]).DTypePolicy(), mesh=mesh))(params, x)
 # EP uses capacity-dropless path at this size: must match dense exactly-ish
@@ -42,6 +42,7 @@ def test_shard_map_backend_matches_vmap(subproc):
     subproc(
         """
 import jax, numpy as np
+from repro import compat
 from repro.core import segmentation as sg
 from repro.core.controller import Controller
 from repro.vp import workloads as wl
@@ -52,7 +53,7 @@ job = wl.cim_workload(layer, mgr_segments=[0, 1], cim_ids_per_mgr={0: (0, 1), 1:
 cfg, states, pending = sg.build(descs, programs=job["programs"], dram_words=job["dram"],
                                 crossbars=job["crossbars"], scratch_init=job["scratch"],
                                 channel_latency=2000)
-mesh = jax.make_mesh((2,), ("segment",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((2,), ("segment",))
 res = {}
 for backend, kw in (("vmap", {}), ("shard_map", {"mesh": mesh})):
     ctl = Controller(cfg, states, pending, backend=backend, quantum=1000, **kw)
@@ -68,19 +69,50 @@ print("shard_map == vmap OK")
     )
 
 
+def test_shard_map_backend_matches_vmap_snn(subproc):
+    """SNN spike traffic over the shard_map backend == vmap, bit-exact."""
+    subproc(
+        """
+import jax, numpy as np
+from repro import compat, snn
+from repro.core.controller import Controller
+
+job = snn.snn_inference_job((16, 12, 8), t_steps=6, rate=0.6, seed=5)
+descs = snn.segmentation_for(2, "uniform", n_segments=2)
+cfg, states, pending, meta = snn.build_snn(job.layers, descs, job.raster)
+mesh = compat.make_mesh((2,), ("segment",))
+res = {}
+for backend, kw in (("vmap", {}), ("shard_map", {"mesh": mesh})):
+    ctl = Controller(cfg, states, pending, backend=backend, quantum=32, **kw)
+    ctl.run(max_rounds=100, check_every=1)
+    st = ctl.result_states()
+    res[backend] = (np.asarray(st["cims"]["spike_counts"]),
+                    np.asarray(st["cims"]["v"]), np.asarray(st["cims"]["ticks"]))
+for a, b in zip(res["vmap"], res["shard_map"]):
+    np.testing.assert_array_equal(a, b)
+np.testing.assert_array_equal(
+    np.asarray(res["vmap"][0][meta["out_unit"][0], meta["out_unit"][1], :meta["n_out"]]),
+    job.expected_counts)
+print("shard_map SNN == vmap OK")
+""",
+        n_devices=2,
+    )
+
+
 def test_elastic_checkpoint_restore(subproc, tmp_path):
     """Save under dp=4 sharding, restore under dp=2 — logical arrays identical."""
     subproc(
         f"""
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.train import checkpoint as ckpt
 
-mesh4 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh4 = compat.make_mesh((4, 2), ("data", "model"))
 x = jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
 xs = jax.device_put(x, NamedSharding(mesh4, P("data", "model")))
 ckpt.save(r"{tmp_path}", 5, {{"w": xs}})
-mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh2 = compat.make_mesh((2, 4), ("data", "model"))
 restored, at = ckpt.restore(r"{tmp_path}", {{"w": x}},
     shardings={{"w": NamedSharding(mesh2, P("data", "model"))}})
 assert at == 5
@@ -96,10 +128,11 @@ def test_hlo_cost_counts_sharded_collectives(subproc):
     subproc(
         """
 import jax, jax.numpy as jnp
+from repro import compat
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.analysis.hlo_cost import analyze
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 def f(w, x):
     def body(c, _):
         return jnp.tanh(c @ w), None
@@ -107,7 +140,7 @@ def f(w, x):
     return y.sum()
 w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
 x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, "model")),
                                  NamedSharding(mesh, P("data", None))),
                 out_shardings=NamedSharding(mesh, P())).lower(w, x).compile()

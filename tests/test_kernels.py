@@ -2,6 +2,9 @@
 sweeps (interpret mode executes the kernel bodies on CPU)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the 'test' extra (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.crossbar_vmm import ops as xb_ops

@@ -3,6 +3,7 @@ semantics vs a python oracle over randomized arithmetic programs."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the 'test' extra (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.vp import isa, riscv
