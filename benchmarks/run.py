@@ -1,17 +1,30 @@
 """Benchmark driver — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.  Set REPRO_FULL_BENCH=1 for
-the unscaled Table III dimensions (the default divides h/w/p by 8 so the
-whole suite finishes in minutes on this 1-core container; speedup *ratios*
-are scale-stable, see EXPERIMENTS.md).
+Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/README.md
+for the per-section line formats).  ``--json`` additionally captures every
+emitted line into a JSON report.  Set REPRO_FULL_BENCH=1 (or pass
+``--full``) for the unscaled Table III dimensions — the default divides
+h/w/p by 8 so the whole suite finishes in minutes on a 1-core container;
+speedup *ratios* are scale-stable, see EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
+from pathlib import Path
+
+# runnable as ``python benchmarks/run.py`` from anywhere: put the repo root
+# (the ``benchmarks`` namespace package) and src/ (``repro``) on the path
+_ROOT = Path(__file__).resolve().parents[1]
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
 
 
-def main() -> None:
+def sections():
     from benchmarks import (
         bench_feature_matrix,
         bench_quantum_sweep,
@@ -21,20 +34,73 @@ def main() -> None:
         bench_vmm_workloads,
     )
 
-    sections = [
-        ("Table I  — simulator feature matrix", bench_feature_matrix.main),
-        ("Table III / §V-B — VMM workloads (riscv vs cim)", bench_vmm_workloads.main),
-        ("Fig. 4c/4d — segmentation speedups (sq vs pll)", bench_segmentation.main),
-        ("SNN — spiking inference, spikes/sec per segmentation", bench_snn.main),
-        ("§V-C — quantum-size sweep", bench_quantum_sweep.main),
-        ("§Roofline — dry-run derived terms (40 cells)", bench_roofline.main),
+    return [
+        ("feature_matrix", "Table I  — simulator feature matrix",
+         bench_feature_matrix.main),
+        ("vmm_workloads", "Table III / §V-B — VMM workloads (riscv vs cim)",
+         bench_vmm_workloads.main),
+        ("segmentation", "Fig. 4c/4d — segmentation speedups (sq vs pll)",
+         bench_segmentation.main),
+        ("snn", "SNN — spiking inference, spikes/sec per segmentation + "
+         "wide-layer naive vs traffic-aware placement", bench_snn.main),
+        ("quantum_sweep", "§V-C — quantum-size sweep", bench_quantum_sweep.main),
+        ("roofline", "§Roofline — dry-run derived terms (40 cells)",
+         bench_roofline.main),
     ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks/run.py",
+        description="Run the paper-reproduction benchmark suite "
+                    "(CSV lines on stdout; optional JSON report).")
+    ap.add_argument("--only", metavar="KEY", default=None,
+                    help="run a single section by key (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="list section keys and titles, then exit")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write {section: [emitted lines]} plus timings "
+                         "to PATH as JSON")
+    ap.add_argument("--full", action="store_true",
+                    help="unscaled Table III dimensions "
+                         "(equivalent to REPRO_FULL_BENCH=1; much slower)")
+    args = ap.parse_args(argv)
+    if args.full:
+        os.environ["REPRO_FULL_BENCH"] = "1"  # before benchmarks.common import
+
+    secs = sections()
+    if args.list:
+        for key, title, _ in secs:
+            print(f"{key:16s} {title}")
+        return
+    if args.only is not None:
+        secs = [s for s in secs if s[0] == args.only]
+        if not secs:
+            sys.exit(f"unknown section {args.only!r}; try --list")
+
+    report = {}
     t0 = time.time()
     print("name,us_per_call,derived")
-    for title, fn in sections:
+    for key, title, fn in secs:
         print(f"# === {title} ===", flush=True)
-        fn(out=print)
-    print(f"# total bench time: {time.time()-t0:.1f}s")
+        lines = []
+
+        def out(line):
+            print(line)
+            lines.append(str(line))
+
+        t1 = time.time()
+        fn(out=out)
+        report[key] = {"title": title, "lines": lines,
+                       "seconds": round(time.time() - t1, 3)}
+    total = time.time() - t0
+    print(f"# total bench time: {total:.1f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"sections": report, "total_seconds": round(total, 3),
+                       "full": bool(os.environ.get("REPRO_FULL_BENCH") == "1")},
+                      f, indent=2)
+        print(f"# json report -> {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,172 @@
+"""Docs smoke check: commands and file references in the documentation set
+must match the repository, so the docs cannot silently rot.
+
+Checked documents: README.md, docs/*.md, benchmarks/README.md.
+
+Rules (stdlib-only, deterministic, no network):
+  1. every relative markdown link target exists;
+  2. every inline code span that looks like a repo path (contains "/" and a
+     known extension, no wildcards) resolves against the repo root, the
+     document's directory, src/, or src/repro/;
+  3. every command in a fenced ``bash`` block references an existing
+     python script / module / shell script, and any ``--flags`` it passes
+     are accepted by the target's ``--help``;
+  4. every fenced ``python`` block compiles (syntax check, no execution).
+
+Run:  python scripts/check_docs.py        (exit 1 + a report on problems)
+"""
+from __future__ import annotations
+
+import re
+import shlex
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = sorted(
+    p for p in ([ROOT / "README.md", ROOT / "benchmarks" / "README.md"]
+                + list((ROOT / "docs").glob("*.md")))
+    if p.exists()
+)
+
+PATHLIKE = re.compile(r"^[\w./-]+\.(py|md|sh|yml|toml)$")
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SPAN = re.compile(r"`([^`\n]+)`")
+FENCE = re.compile(r"^```(\w*)\s*$")
+
+_help_cache: dict = {}
+
+
+def resolve(path: str, doc: Path) -> bool:
+    if any(c in path for c in "*<>{}"):
+        return True  # wildcard/placeholder, not a literal reference
+    cands = (ROOT, doc.parent, ROOT / "src", ROOT / "src" / "repro")
+    return any((c / path).exists() for c in cands)
+
+
+def module_file(mod: str) -> bool:
+    rel = Path(*mod.split("."))
+    for base in (ROOT, ROOT / "src"):
+        if (base / rel).is_dir() or (base / rel).with_suffix(".py").exists():
+            return True
+    # installed third-party module (e.g. python -m pytest)
+    import importlib.util
+
+    try:
+        return importlib.util.find_spec(mod.split(".")[0]) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+def help_text(target: list[str]) -> str:
+    key = tuple(target)
+    if key not in _help_cache:
+        r = subprocess.run(
+            [sys.executable, *target, "--help"], cwd=ROOT, text=True,
+            capture_output=True, timeout=120,
+        )
+        _help_cache[key] = r.stdout + r.stderr
+    return _help_cache[key]
+
+
+def check_command(line: str, problems: list, where: str):
+    try:
+        words = shlex.split(line.split("#", 1)[0])
+    except ValueError:
+        return
+    while words and re.fullmatch(r"\w+=\S*", words[0]):  # env assignments
+        words.pop(0)
+    if not words:
+        return
+    cmd, args = words[0], words[1:]
+    if cmd in ("bash", "sh"):
+        if args and not resolve(args[0], ROOT / "x"):
+            problems.append(f"{where}: shell script {args[0]!r} not found")
+        return
+    if cmd not in ("python", "python3"):
+        return  # pip/cd/etc: nothing to resolve
+    target: list[str] = []
+    if args and args[0] == "-m":
+        if len(args) < 2 or not module_file(args[1]):
+            problems.append(f"{where}: module {args[1] if len(args) > 1 else '?'!r} not found")
+            return
+        target = ["-m", args[1]]
+        rest = args[2:]
+    elif args and args[0].endswith(".py"):
+        if not resolve(args[0], ROOT / "x"):
+            problems.append(f"{where}: script {args[0]!r} not found")
+            return
+        target = [args[0]]
+        rest = args[1:]
+    else:
+        return  # python -c / bare python
+    flags = [w for w in rest if w.startswith("--")]
+    # pytest's flag surface is its own contract; only check our scripts
+    if flags and target != ["-m", "pytest"]:
+        text = help_text(target)
+        for f in flags:
+            if f.split("=", 1)[0] not in text:
+                problems.append(f"{where}: {' '.join(target)} does not accept {f!r}")
+    if target == ["-m", "pytest"]:
+        for w in rest:
+            if w.startswith("tests/") and not (ROOT / w.split("::")[0]).exists():
+                problems.append(f"{where}: test path {w!r} not found")
+
+
+def check_doc(doc: Path, problems: list):
+    rel = doc.relative_to(ROOT)
+    lines = doc.read_text().splitlines()
+    fence_lang = None
+    py_block: list[str] = []
+    py_start = 0
+    for i, line in enumerate(lines, 1):
+        m = FENCE.match(line)
+        if m:
+            if fence_lang == "python" and py_block:
+                try:
+                    compile("\n".join(py_block), f"{rel}:{py_start}", "exec")
+                except SyntaxError as e:
+                    problems.append(f"{rel}:{py_start}: python block does not compile: {e}")
+            if fence_lang is None:
+                fence_lang = m.group(1) or "text"
+                py_block, py_start = [], i + 1
+            else:
+                fence_lang = None
+            continue
+        if fence_lang == "bash":
+            stripped = line.strip().lstrip("$ ").strip()
+            if stripped and not stripped.startswith("#"):
+                check_command(stripped, problems, f"{rel}:{i}")
+        elif fence_lang == "python":
+            py_block.append(line)
+        elif fence_lang is None:
+            for link in LINK.findall(line):
+                if "://" in link or link.startswith("#"):
+                    continue
+                if not resolve(link.split("#")[0], doc):
+                    problems.append(f"{rel}:{i}: broken link {link!r}")
+            for span in SPAN.findall(line):
+                if "/" in span and PATHLIKE.match(span) and not resolve(span, doc):
+                    problems.append(f"{rel}:{i}: dangling path reference {span!r}")
+
+
+def main() -> int:
+    problems: list = []
+    if not DOCS:
+        print("no documents found to check", file=sys.stderr)
+        return 1
+    for doc in DOCS:
+        check_doc(doc, problems)
+    if problems:
+        print(f"{len(problems)} documentation problem(s):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"docs ok: {len(DOCS)} documents checked "
+          f"({', '.join(str(d.relative_to(ROOT)) for d in DOCS)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Populate artifacts/dryrun/{baseline,opt}/*.json — the per-cell compile
+# artifacts consumed by benchmarks/bench_roofline.py and
+# scripts/render_experiments.py.  The sweep lowers + compiles every
+# (arch × shape × mesh) cell (~40 min on a laptop-class host); cells that
+# already have an artifact are skipped unless --force is passed through.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src python -m repro.launch.dryrun --all --tag baseline "$@"
+PYTHONPATH=src python -m repro.launch.dryrun --all --tag opt --opt "$@"

@@ -90,6 +90,82 @@ def auto_segmentation(module_costs: dict, n_segments: int):
     return [d for d in descs if d.cpu or d.dram or d.n_cims]
 
 
+def traffic_partition(widths, loads, traffic, n_segments: int,
+                      slots_per_seg: int, refine_passes: int = 4):
+    """Spike-traffic-aware placement of shard groups onto segments.
+
+    widths:  slots each group needs (a multi-crossbar column group occupies
+             ``width`` co-located slots — it is atomic)
+    loads:   per-group compute cost (synaptic ops/tick), the tie-breaker
+    traffic: (G, G) measured spike rates — traffic[i, j] events/tick from
+             group i to group j (profiling pass, snn/topology.py)
+
+    Minimizes the cross-segment traffic cut under per-segment slot budgets:
+    groups are seeded greedily in descending traffic-degree order, each
+    into the feasible segment with the highest affinity (traffic to groups
+    already there; ties prefer the fullest segment, then the lightest
+    load — packing communicating groups densely is also what makes the
+    host-side step cheaper: empty segments are dropped by the caller).
+    A bounded single-move refinement pass then walks groups in index order
+    and relocates any whose move strictly reduces the cut.  Deterministic.
+
+    Returns an int array: segment id per group.
+    """
+    widths = np.asarray(widths, int)
+    loads = np.asarray(loads, float)
+    traffic = np.asarray(traffic, float)
+    g = len(widths)
+    assert traffic.shape == (g, g) and len(loads) == g
+    assert widths.max(initial=0) <= slots_per_seg, \
+        "a column group is atomic: raise slots_per_seg to its width"
+    assert n_segments * slots_per_seg >= widths.sum(), "not enough slots"
+    sym = traffic + traffic.T
+    assign = np.full(g, -1, int)
+    used = np.zeros(n_segments, int)
+    load = np.zeros(n_segments, float)
+
+    def affinity(i, s):
+        members = np.flatnonzero(assign == s)
+        return sym[i, members].sum()
+
+    # widest groups first (first-fit-decreasing keeps atomic groups
+    # placeable), then traffic degree so hot groups seed their segments
+    order = sorted(range(g), key=lambda i: (-widths[i], -sym[i].sum(), -loads[i], i))
+    for i in order:
+        feas = [s for s in range(n_segments) if used[s] + widths[i] <= slots_per_seg]
+        if not feas:
+            raise AssertionError(
+                f"slot budgets too fragmented for a width-{widths[i]} group; "
+                "raise n_segments or slots_per_seg"
+            )
+        s = max(feas, key=lambda s: (affinity(i, s), used[s], -load[s], -s))
+        assign[i] = s
+        used[s] += widths[i]
+        load[s] += loads[i]
+
+    for _ in range(refine_passes):
+        moved = False
+        for i in range(g):
+            best_s, best_gain = assign[i], 0.0
+            here = affinity(i, assign[i])
+            for s in range(n_segments):
+                if s == assign[i] or used[s] + widths[i] > slots_per_seg:
+                    continue
+                gain = affinity(i, s) - here
+                if gain > best_gain + 1e-12:
+                    best_s, best_gain = s, gain
+            if best_s != assign[i]:
+                used[assign[i]] -= widths[i]
+                load[assign[i]] -= loads[i]
+                assign[i] = best_s
+                used[best_s] += widths[i]
+                load[best_s] += loads[i]
+                moved = True
+        if not moved:
+            break
+    return assign
+
+
 def build(descs, *, programs=None, dram_words=None, crossbars=None,
           scratch_init=None, cim_init=None, channel_latency: int = 10_000,
           local_latency: int = 64, use_kernel: bool = False):
@@ -120,6 +196,16 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
             cim_seg.append(s)
             cim_slot.append(k)
             mgr_of.append(d.cim_mgr if d.cim_mgr >= 0 else s)
+    # state shapes follow the richest wiring: AER fan-out tables (a wide
+    # layer's stripe feeds every downstream shard) and column groups (a
+    # contributor tile names an owner slot other than itself)
+    snn_fanout = 1
+    snn_grouped = False
+    for g, fields in (cim_init or {}).items():
+        if "dst_seg" in fields:
+            snn_fanout = max(snn_fanout, int(np.size(fields["dst_seg"])))
+        if "owner_slot" in fields and int(fields["owner_slot"]) != cim_slot[g]:
+            snn_grouped = True
     cfg = pf.VPConfig(
         n_segments=n,
         # size slot state for the densest segment (>= Table II's 2) — a
@@ -133,6 +219,8 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
         use_kernel=use_kernel,
         has_snn=any(int(f.get("mode", 0)) == isa.CIM_MODE_SPIKE
                     for f in (cim_init or {}).values()),
+        snn_fanout=snn_fanout,
+        snn_grouped=snn_grouped,
     )
     states = []
     for s, d in enumerate(descs):

@@ -28,15 +28,19 @@ from repro.kernels.lif_step.ref import SPIKE_SAT
 TILE_R = 128  # neurons per program (lane-aligned)
 
 
-def _kernel(s_ref, w_ref, v_ref, r_ref, th_ref, lk_ref, rp_ref,
+def _kernel(s_ref, w_ref, x_ref, v_ref, r_ref, th_ref, lk_ref, rp_ref,
             vo_ref, ro_ref, so_ref):
-    """s (1, C) int32; w (1, C, TILE_R) int8; v/r (1, TILE_R) int32;
-    th/lk/rp (1,) int32 -> v'/r'/fired (1, TILE_R) int32."""
+    """s (1, C) int32; w (1, C, TILE_R) int8; x (1, TILE_R) int32 extra
+    charge; v/r (1, TILE_R) int32; th/lk/rp (1,) int32
+    -> v'/r'/fired (1, TILE_R) int32."""
     # fan-in saturation (mirrors ref.py): bounds the accumulator inside
     # fp32's exact-integer range so the MXU contraction never rounds
     s = jnp.clip(s_ref[...], -SPIKE_SAT, SPIKE_SAT).astype(jnp.float32)
     w = w_ref[0].astype(jnp.float32)  # (C, TILE_R)
     syn = jax.lax.dot(s, w, preferred_element_type=jnp.float32).astype(jnp.int32)
+    # extra charge from the layer's other column tiles (wide multi-crossbar
+    # layers): already int32-exact, summed after the local contraction
+    syn = syn + x_ref[...]
     v = v_ref[...]
     refrac = r_ref[...]
     thresh, leak, rp = th_ref[0], lk_ref[0], rp_ref[0]
@@ -50,9 +54,10 @@ def _kernel(s_ref, w_ref, v_ref, r_ref, th_ref, lk_ref, rp_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def lif_step_tiles(weights, spikes, v, refrac, thresh, leak, refrac_period,
-                   interpret: bool = True):
+                   extra=None, interpret: bool = True):
     """weights (U, R, C) int8; spikes (U, C) int32; v/refrac (U, R) int32;
-    thresh/leak/refrac_period (U,) int32 -> (v', refrac', fired) each (U, R).
+    thresh/leak/refrac_period (U,) int32; extra (U, R) int32 or None
+    -> (v', refrac', fired) each (U, R).
 
     R is padded to the tile multiple; C (the contraction) stays whole — a
     256-deep fan-in fits VMEM comfortably (256×128 int8 = 32 KB/tile).
@@ -62,9 +67,13 @@ def lif_step_tiles(weights, spikes, v, refrac, thresh, leak, refrac_period,
     wt = jnp.pad(weights, ((0, 0), (0, rp_pad - r), (0, 0))).transpose(0, 2, 1)  # (U, C, Rp)
     pad_r = lambda x: jnp.pad(x, ((0, 0), (0, rp_pad - r)))
     vp, rfp = pad_r(v), pad_r(refrac)
+    if extra is None:
+        extra = jnp.zeros((u, r), jnp.int32)
+    xp = pad_r(extra.astype(jnp.int32))
     # padded neurons must never fire: give the pad lanes an unreachable
     # threshold by masking v to 0 (thresh >= 1 contract) — v pad is 0 and
-    # syn pad is 0 (zero weights), so fired_pad = (0 >= thresh) = False.
+    # syn pad is 0 (zero weights + zero extra), so fired_pad = (0 >= thresh)
+    # = False.
 
     grid = (u, rp_pad // TILE_R)
     out = pl.pallas_call(
@@ -73,6 +82,7 @@ def lif_step_tiles(weights, spikes, v, refrac, thresh, leak, refrac_period,
         in_specs=[
             pl.BlockSpec((1, c), lambda i, j: (i, 0)),
             pl.BlockSpec((1, c, TILE_R), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
             pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
             pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
             pl.BlockSpec((1,), lambda i, j: (i,)),
@@ -90,5 +100,5 @@ def lif_step_tiles(weights, spikes, v, refrac, thresh, leak, refrac_period,
             jax.ShapeDtypeStruct((u, rp_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(spikes, wt, vp, rfp, thresh, leak, refrac_period)
+    )(spikes, wt, xp, vp, rfp, thresh, leak, refrac_period)
     return out[0][:, :r], out[1][:, :r], out[2][:, :r]

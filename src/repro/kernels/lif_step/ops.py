@@ -12,16 +12,18 @@ from repro.kernels.lif_step.kernel import lif_step_tiles
 INTERPRET = True  # CPU container: no TPU lowering available
 
 
-def lif_step_units(weights, spikes, v, refrac, thresh, leak, refrac_period):
+def lif_step_units(weights, spikes, v, refrac, thresh, leak, refrac_period,
+                   extra=None):
     """Batched over units: weights (U, R, C) int8; spikes (U, C) int32;
-    v/refrac (U, R) int32; thresh/leak/refrac_period (U,) int32
-    -> (v', refrac', fired) each (U, R) int32.
+    v/refrac (U, R) int32; thresh/leak/refrac_period (U,) int32;
+    extra (U, R) int32 or None (merged charge from a wide layer's other
+    column tiles) -> (v', refrac', fired) each (U, R) int32.
 
     Used by the spike-mode CIM tick (vp/cim.py) when the platform is built
     with ``use_kernel=True``.
     """
     return lif_step_tiles(weights, spikes, v, refrac, thresh, leak,
-                          refrac_period, interpret=INTERPRET)
+                          refrac_period, extra, interpret=INTERPRET)
 
 
 def lif_step(weights, spikes, v, refrac, thresh, leak, refrac_period):

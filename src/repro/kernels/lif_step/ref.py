@@ -28,12 +28,23 @@ SPIKE_SAT = 511  # per-axon per-tick fan-in saturation (9 bits): keeps
                  # int32 oracle (the AER analogue of the DAC input clamp)
 
 
-def lif_step(weights, spikes, v, refrac, thresh, leak, refrac_period):
-    """weights int8 (R, C); spikes int32 (C,); v/refrac int32 (R,);
-    thresh/leak/refrac_period int32 scalars -> (v', refrac', fired int32 (R,)).
+def syn_charge(weights, spikes):
+    """Synaptic accumulation alone: int8 (R, C) crossbar × int32 (C,) spike
+    counts -> int32 (R,) charge, with the same fan-in saturation the fused
+    step applies.  Column tiles of a multi-crossbar layer compute this and
+    forward it to the stripe owner (vp/cim.py snn_tick); because the clip is
+    element-wise and the int32 contraction distributes over column blocks,
+    the tiled sum is bit-identical to one full-width contraction.
     """
     spikes = jnp.clip(spikes, -SPIKE_SAT, SPIKE_SAT)
-    syn = weights.astype(jnp.int32) @ spikes.astype(jnp.int32)
+    return weights.astype(jnp.int32) @ spikes.astype(jnp.int32)
+
+
+def lif_update(syn, v, refrac, thresh, leak, refrac_period):
+    """Post-contraction LIF stages (leak / threshold / reset / refractory)
+    on a precomputed charge vector ``syn`` int32 (R,).  Split out so callers
+    that already hold the charge — the grouped spike-mode tick sums column
+    tiles' partial contractions — never pay the synapse matmul twice."""
     active = refrac == 0
     v1 = jnp.maximum(v + jnp.where(active, syn, 0) - leak, 0)
     fired = active & (v1 >= thresh)
@@ -42,7 +53,29 @@ def lif_step(weights, spikes, v, refrac, thresh, leak, refrac_period):
     return v_out, refrac_out, fired.astype(jnp.int32)
 
 
-def lif_step_units(weights, spikes, v, refrac, thresh, leak, refrac_period):
+def lif_step(weights, spikes, v, refrac, thresh, leak, refrac_period,
+             extra=None):
+    """weights int8 (R, C); spikes int32 (C,); v/refrac int32 (R,);
+    thresh/leak/refrac_period int32 scalars -> (v', refrac', fired int32 (R,)).
+
+    ``extra`` (int32 (R,), optional) is additional synaptic charge summed
+    into the accumulation stage — the merged contribution of a wide layer's
+    other column tiles.  It obeys the same refractory gate as the local
+    crossbar's charge.
+    """
+    syn = syn_charge(weights, spikes)
+    if extra is not None:
+        syn = syn + extra
+    return lif_update(syn, v, refrac, thresh, leak, refrac_period)
+
+
+def lif_step_units(weights, spikes, v, refrac, thresh, leak, refrac_period,
+                   extra=None):
     """Batched over units: weights (U, R, C) int8; spikes (U, C) int32;
-    v/refrac (U, R) int32; thresh/leak/refrac_period (U,) int32."""
-    return jax.vmap(lif_step)(weights, spikes, v, refrac, thresh, leak, refrac_period)
+    v/refrac (U, R) int32; thresh/leak/refrac_period (U,) int32;
+    extra (U, R) int32 or None."""
+    if extra is None:
+        return jax.vmap(lif_step)(weights, spikes, v, refrac, thresh, leak,
+                                  refrac_period)
+    return jax.vmap(lif_step)(weights, spikes, v, refrac, thresh, leak,
+                              refrac_period, extra)

@@ -5,11 +5,14 @@ Module map:
   neuron.py    — vectorized LIF pool state + the pure tick update (the
                  single source of LIF semantics, shared with the Pallas
                  kernel in kernels/lif_step/ and the spike-mode CIM unit)
-  topology.py  — SNN-to-VP mapping: one layer per spike-mode crossbar,
-                 inter-layer AER wiring, placement strategies (uniform /
-                 load_oriented / auto), input-raster injection, readback
+  topology.py  — SNN-to-VP mapping: layers tiled onto spike-mode crossbars
+                 (wide layers shard into row stripes + co-located column
+                 groups), inter-layer AER wiring, placement strategies
+                 (uniform / load_oriented / auto / traffic-aware auto),
+                 spike-rate profiling, input-raster injection, readback
   workloads.py — rate-coded inference jobs + the pure-jnp network oracle
-                 the VP is verified bit-exactly against
+                 the VP is verified bit-exactly against (oracle_rates is
+                 the profiling pass behind traffic-aware placement)
 
 Related VP pieces: core/channel.py MSG_SPIKE (tick-bucketed AER events),
 vp/isa.py CIM_REG_MODE, vp/cim.py snn_tick (quantum-boundary LIF
@@ -18,14 +21,20 @@ integration), benchmarks/bench_snn.py (spikes/sec per segmentation).
 from repro.snn.neuron import LIFParams, lif_step, pool_state
 from repro.snn.topology import (
     SNNLayer,
+    StripeGroup,
     auto_segmentation_for,
     build_snn,
+    layer_groups,
+    measure_traffic,
+    n_units_for,
     output_spike_counts,
+    profile_traffic,
     segmentation_for,
     total_spikes,
 )
 from repro.snn.workloads import (
     SNNJob,
+    oracle_rates,
     oracle_run,
     random_snn,
     rate_encode,

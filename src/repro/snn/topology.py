@@ -1,21 +1,40 @@
 """SNN-to-VP mapping: layers onto spike-mode CIM units across segments.
 
-A feed-forward SNN maps one layer per crossbar: the layer's (n_out, n_in)
-int8 synapse matrix becomes the unit's conductances, the layer's neurons
-its rows.  Inter-layer connectivity is pure AER traffic: neuron j of layer
-l firing at tick T becomes a MSG_SPIKE to layer l+1's unit (axon j) with
-t_avail = T + channel latency, integrated at tick T+1 — one tick of axonal
-delay per hop, *independent of placement*, because the builder enforces
-``tick_period >= channel_latency`` (the same inequality the paper demands
-of quantum vs latency).  The last layer is a sink: it counts its own spikes
-instead of emitting events.
+A feed-forward SNN maps each layer onto one or more 256×256 crossbars.  A
+layer that fits one crossbar becomes a single spike-mode unit: its
+(n_out, n_in) int8 synapse matrix the unit's conductances, its neurons the
+unit's rows.  A *wide* layer is tiled (Fig.: RANC/TrueNorth-style
+multi-core layers):
+
+  * rows (output neurons) shard into ≤256-neuron *stripes*; each stripe
+    keeps its own membrane state and can be placed on any segment.  Input
+    spikes fan out to every stripe; output spikes merge back by global
+    neuron id (each stripe's ``axon_base`` offsets its rows into the
+    downstream axon space).
+  * columns (input axons) of a stripe whose fan-in exceeds 256 shard into
+    a *column group* of co-located slots: the first tile (the owner) holds
+    the stripe's neurons, the rest are contributor tiles that forward
+    their partial synaptic charge to the owner within the same tick
+    (vp/cim.py snn_tick).  Co-location makes the reduction tick-atomic, so
+    sharded and unsharded layers are bit-identical.
+
+Inter-layer connectivity is pure AER traffic: neuron j of layer l firing at
+tick T becomes a MSG_SPIKE to each of layer l+1's stripes (the tile whose
+column slice covers axon j) with t_avail = T + channel latency, integrated
+at tick T+1 — one tick of axonal delay per hop, *independent of placement*,
+because the builder enforces ``tick_period >= channel_latency`` (the same
+inequality the paper demands of quantum vs latency).  The last layer is a
+sink: it counts its own spikes instead of emitting events.
 
 Placement strategies mirror the dense-VMM ones (core/segmentation.py):
-``uniform`` spreads one unit per CPU segment, ``load_oriented`` packs units
-into CIM-only segments, ``auto`` greedily balances per-layer synaptic-op
-costs.  The whole network needs no CPU programs — every CPU halts at t=0
-and the simulation is driven entirely by the event machinery, which is
-exactly what makes SNNs the stress test for segmentation choices.
+``uniform`` spreads units across CPU segments, ``load_oriented`` packs them
+into CIM-only segments, ``auto`` balances per-group synaptic-op costs — or,
+given a measured traffic matrix (``profile_traffic`` / ``measure_traffic``),
+places shard groups to minimize cross-segment spike traffic under
+per-segment slot budgets (core/segmentation.traffic_partition).  The whole
+network needs no CPU programs — every CPU halts at t=0 and the simulation
+is driven entirely by the event machinery, which is exactly what makes SNNs
+the stress test for segmentation choices.
 """
 from __future__ import annotations
 
@@ -27,6 +46,7 @@ import numpy as np
 
 from repro.core import segmentation as sg
 from repro.vp import isa, platform as pf
+from repro.vp.cim import XBAR
 from repro.snn.neuron import LIFParams
 
 
@@ -44,53 +64,228 @@ class SNNLayer:
         return self.weights.shape[1]
 
 
-def segmentation_for(n_layers: int, strategy: str, n_segments: int = 4):
-    """Segment descriptors with >= n_layers CIM units under ``strategy``."""
+@dataclasses.dataclass(frozen=True)
+class StripeGroup:
+    """One placeable shard of a layer: a ≤256-neuron stripe together with
+    the column tiles covering its full fan-in.  The group's ``width`` slots
+    must be co-located (consecutive slots of one segment)."""
+    layer: int
+    stripe: int
+    r0: int  # global output-neuron range [r0, r1) of the stripe
+    r1: int
+    col_edges: tuple  # ((c0, c1), ...) — input-axon slice per tile
+
+    @property
+    def width(self) -> int:
+        return len(self.col_edges)
+
+    @property
+    def n_rows(self) -> int:
+        return self.r1 - self.r0
+
+
+def layer_groups(layers) -> list:
+    """Tile every layer into stripe groups (row stripes × column tiles)."""
+    groups = []
+    for li, l in enumerate(layers):
+        col_edges = tuple(
+            (c, min(c + XBAR, l.n_in)) for c in range(0, l.n_in, XBAR)
+        )
+        for si, r0 in enumerate(range(0, l.n_out, XBAR)):
+            groups.append(
+                StripeGroup(li, si, r0, min(r0 + XBAR, l.n_out), col_edges)
+            )
+    return groups
+
+
+def n_units_for(layers) -> int:
+    """Total CIM units (crossbar tiles) the network occupies."""
+    return sum(g.width for g in layer_groups(layers))
+
+
+def _chunk_widths(widths, n_chunks):
+    """Balanced contiguous partition of atomic group widths into ≤ n_chunks
+    slot capacities.  Contiguity matters: ``build_snn``'s default first-fit
+    placement walks groups in chain order, so exact consecutive chunks are
+    filled with zero fragmentation — a column group can never be stranded.
+    """
+    caps = [0] * n_chunks
+    total = sum(widths)
+    s = 0
+    for w in widths:
+        caps[s] += w
+        if s + 1 < n_chunks and caps[s] >= total / n_chunks:
+            s += 1
+    return caps
+
+
+def segmentation_for(layers_or_n, strategy: str, n_segments: int = 4):
+    """Segment descriptors with enough CIM slots for the network.
+
+    ``layers_or_n``: the [SNNLayer, ...] chain (slot capacities follow its
+    tiling, keeping every multi-crossbar column group placeable) or, for
+    narrow single-unit layers, just the layer count.
+    """
+    if isinstance(layers_or_n, int):
+        widths = [1] * layers_or_n
+    else:
+        widths = [g.width for g in layer_groups(layers_or_n)]
+    n_units = sum(widths)
     if strategy == "uniform":
-        per = -(-n_layers // n_segments)
-        descs = sg.uniform(n_cpus=n_segments, cims_per_cpu=per)
+        if isinstance(layers_or_n, int):  # historical equal split
+            caps = [-(-n_units // n_segments)] * n_segments
+        else:
+            caps = _chunk_widths(widths, n_segments)
+        descs = [sg.SegmentDesc(cpu=True, dram=(i == 0), n_cims=caps[i], cim_mgr=i)
+                 for i in range(n_segments)]
     elif strategy == "load_oriented":
         n_cim_segs = max(n_segments - 2, 1)
-        per = -(-n_layers // n_cim_segs)
+        if isinstance(layers_or_n, int):
+            caps = [-(-n_units // n_cim_segs)] * n_cim_segs
+        else:
+            caps = _chunk_widths(widths, n_cim_segs)
         descs = [sg.SegmentDesc(cpu=True, dram=True), sg.SegmentDesc(cpu=True)]
-        descs += [sg.SegmentDesc(n_cims=per, cim_mgr=1) for _ in range(n_cim_segs)]
+        descs += [sg.SegmentDesc(n_cims=caps[j], cim_mgr=1) for j in range(n_cim_segs)]
     elif strategy == "auto":
         raise ValueError("use auto_segmentation_for(layers, n_segments)")
     else:
         raise ValueError(strategy)
-    assert sum(d.n_cims for d in descs) >= n_layers
+    assert sum(d.n_cims for d in descs) >= n_units
     return descs
 
 
-def auto_segmentation_for(layers, n_segments: int = 4, slots_per_seg: int = 2):
-    """Greedy balanced placement over per-layer synaptic-op costs.
+def auto_segmentation_for(layers, n_segments: int = 4, slots_per_seg: int = 2,
+                          traffic=None):
+    """Cost- or traffic-aware placement of shard groups onto segments.
 
-    Returns (descs, placement): longest-processing-time assignment of
-    layers to segments (respecting the per-segment slot cap), plus the
-    layer -> global-unit map that keeps the assignment — without it a
-    cost-sorted greedy pass balances *units* while the layers land on
-    them in chain order, which can be maximally imbalanced.
+    Without ``traffic``: greedy longest-processing-time assignment over
+    per-group synaptic-op costs (rows × fan-in), respecting the
+    per-segment slot cap and group atomicity.
+
+    With ``traffic`` (a (G, G) measured spike-rate matrix from
+    ``profile_traffic`` or ``measure_traffic``): delegates to
+    ``core.segmentation.traffic_partition``, which minimizes the
+    cross-segment spike-traffic cut under the same slot budgets; segments
+    left empty are dropped, so heavy mutual traffic also shrinks the
+    simulated platform.
+
+    Returns (descs, placement): segment descriptors plus the group ->
+    first-global-unit map ``build_snn`` consumes (for single-crossbar
+    layers a group is a layer, so the map is the familiar layer -> unit
+    list).  Without the explicit map a cost-sorted greedy pass balances
+    *units* while the layers land on them in chain order, which can be
+    maximally imbalanced.
     """
-    costs = [float(l.n_out * l.n_in) for l in layers]
-    order = sorted(range(len(layers)), key=lambda i: -costs[i])
-    n_seg = max(1, min(n_segments, len(layers)))
-    assert n_seg * slots_per_seg >= len(layers), "not enough slots"
-    loads = [0.0] * n_seg
-    assign: list[list[int]] = [[] for _ in range(n_seg)]
-    for i in order:
-        open_segs = [s for s in range(n_seg) if len(assign[s]) < slots_per_seg]
-        s = min(open_segs, key=lambda s: loads[s])
-        assign[s].append(i)
-        loads[s] += costs[i]
-    descs, placement = [], {}
+    groups = layer_groups(layers)
+    widths = [g.width for g in groups]
+    costs = [float(g.n_rows * layers[g.layer].n_in) for g in groups]
+    assert max(widths) <= slots_per_seg, \
+        "a column group is atomic: raise slots_per_seg to its width"
+    if traffic is not None:
+        assign = sg.traffic_partition(widths, costs, traffic, n_segments,
+                                      slots_per_seg)
+    else:
+        n_seg = max(1, min(n_segments, len(groups)))
+        assert n_seg * slots_per_seg >= sum(widths), "not enough slots"
+        order = sorted(range(len(groups)), key=lambda i: -costs[i])
+        loads = [0.0] * n_seg
+        used = [0] * n_seg
+        assign = np.full(len(groups), -1, int)
+        for i in order:
+            open_segs = [s for s in range(n_seg)
+                         if used[s] + widths[i] <= slots_per_seg]
+            s = min(open_segs, key=lambda s: (loads[s], s))
+            assign[i] = s
+            used[s] += widths[i]
+            loads[s] += costs[i]
+    # compact to the segments actually used (traffic packing may empty some)
+    live = sorted(set(int(s) for s in assign))
+    remap = {s: i for i, s in enumerate(live)}
+    descs, placement = [], np.zeros(len(groups), int)
     g = 0
-    for s in range(n_seg):
-        descs.append(sg.SegmentDesc(cpu=(s == 0), dram=(s == 0),
-                                    n_cims=len(assign[s]), cim_mgr=0))
-        for layer_idx in assign[s]:
-            placement[layer_idx] = g
-            g += 1
-    return descs, [placement[i] for i in range(len(layers))]
+    for s in live:
+        members = [i for i in range(len(groups)) if assign[i] == s]
+        w = sum(widths[i] for i in members)
+        descs.append(sg.SegmentDesc(cpu=(remap[s] == 0), dram=(remap[s] == 0),
+                                    n_cims=w, cim_mgr=0))
+        for i in members:
+            placement[i] = g
+            g += widths[i]
+    return descs, list(placement)
+
+
+# ---------------------------------------------------------------------------
+# traffic profiling
+
+
+def profile_traffic(layers, raster):
+    """Profiling pass over the pure-jnp oracle: per-group spike rates.
+
+    Returns (rates, traffic): ``rates[i]`` = spikes/tick emitted by group
+    i; ``traffic[i, j]`` = AER events/tick flowing from group i to group j
+    (every spike a stripe emits becomes one event per downstream stripe —
+    the tile it lands in is part of the same co-located group).
+    """
+    from repro.snn.workloads import oracle_rates
+
+    per_neuron, n_ticks = oracle_rates(layers, raster)
+    groups = layer_groups(layers)
+    rates = np.array([
+        per_neuron[g.layer][g.r0:g.r1].sum() / max(n_ticks, 1) for g in groups
+    ])
+    return rates, _rates_to_traffic(groups, rates)
+
+
+def measure_traffic(states, meta):
+    """Traffic matrix from a completed VP run's per-unit spike counters.
+
+    The measured analogue of ``profile_traffic``: run the workload once
+    under any placement, then read each stripe owner's emitted-spike and
+    tick counters out of the simulation state (``Controller.result_states``).
+    """
+    groups = [g["group"] for g in meta["groups"]]
+    cims = states["cims"]
+    rates = []
+    for info in meta["groups"]:
+        seg, slot = info["units"][0]
+        emitted = float(np.asarray(cims["spike_counts"][seg, slot]).sum())
+        ticks = int(np.asarray(cims["ticks"][seg, slot]))
+        rates.append(emitted / max(ticks, 1))
+    rates = np.array(rates)
+    return rates, _rates_to_traffic(groups, rates)
+
+
+def _rates_to_traffic(groups, rates):
+    t = np.zeros((len(groups), len(groups)))
+    for i, gi in enumerate(groups):
+        for j, gj in enumerate(groups):
+            if gj.layer == gi.layer + 1:
+                t[i, j] = rates[i]
+    return t
+
+
+# ---------------------------------------------------------------------------
+# builder
+
+
+def _default_placement(groups, descs):
+    """First-fit of groups (in chain order) onto segment slot capacity."""
+    caps = [d.n_cims for d in descs]
+    base = np.concatenate([[0], np.cumsum(caps)])
+    used = [0] * len(descs)
+    placement = []
+    for g in groups:
+        for s in range(len(descs)):
+            if caps[s] - used[s] >= g.width:
+                placement.append(int(base[s]) + used[s])
+                used[s] += g.width
+                break
+        else:
+            raise AssertionError(
+                f"no segment has {g.width} contiguous free CIM slots for "
+                f"layer {g.layer} stripe {g.stripe}; widen the segmentation"
+            )
+    return placement
 
 
 def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_000,
@@ -98,84 +293,167 @@ def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_00
               use_kernel: bool = False):
     """Assemble a runnable SNN simulation.
 
-    layers: [SNNLayer, ...] feed-forward chain
+    layers: [SNNLayer, ...] feed-forward chain; layers wider than one
+        crossbar are tiled into stripe groups (see ``layer_groups``)
     descs: segment descriptors (segmentation_for / auto_segmentation_for)
-    placement: layer index -> global CIM unit id (default: layer i on
-        unit i; auto_segmentation_for returns the cost-balanced map)
+    placement: group index -> first global CIM unit id; a group's ``width``
+        units occupy consecutive slots of one segment (default: first-fit
+        in chain order; auto_segmentation_for returns the balanced map).
+        For single-crossbar layers this is the familiar layer -> unit list.
     raster: int (T, n_in) input spike counts; timestep k is integrated at
         layer 0's tick k (injected as pre-scheduled AER events)
     Returns (cfg, states, pending, meta) ready for the Controller; meta
-    locates the output unit for spike-count readback.
+    locates the output units for spike-count readback.
     """
     assert tick_period >= channel_latency >= local_latency, \
         "spike delivery must land within one tick under any placement"
     n_layers = len(layers)
+    for i in range(1, n_layers):
+        assert layers[i].n_in == layers[i - 1].n_out, "layer chain mismatch"
+    groups = layer_groups(layers)
+    by_layer = {}
+    for gi, g in enumerate(groups):
+        by_layer.setdefault(g.layer, []).append(gi)
+
     cim_seg, cim_slot = [], []
     for s, d in enumerate(descs):
         for k in range(d.n_cims):
             cim_seg.append(s)
             cim_slot.append(k)
-    assert len(cim_seg) >= n_layers, "not enough CIM units for the layers"
-    placement = list(placement) if placement is not None else list(range(n_layers))
-    assert len(placement) == n_layers and len(set(placement)) == n_layers
-    for i in range(1, n_layers):
-        assert layers[i].n_in == layers[i - 1].n_out, "layer chain mismatch"
+    n_units = sum(g.width for g in groups)
+    assert len(cim_seg) >= n_units, "not enough CIM units for the layers"
+    if placement is None:
+        placement = _default_placement(groups, descs)
+    placement = list(placement)
+    assert len(placement) == len(groups), \
+        "placement maps stripe groups (layer_groups order) to first unit ids"
+    taken = set()
+    for gi, g in enumerate(groups):
+        run = range(placement[gi], placement[gi] + g.width)
+        assert run.stop <= len(cim_seg), f"group {gi} placed past the last unit"
+        assert len({cim_seg[u] for u in run}) == 1, \
+            f"column group {gi} must be co-located in one segment"
+        assert not taken.intersection(run), f"group {gi} overlaps another group"
+        taken.update(run)
 
-    crossbars = {placement[i]: np.asarray(l.weights, np.int8)
-                 for i, l in enumerate(layers)}
-    cim_init = {}
-    for i, l in enumerate(layers):
+    # tile -> unit wiring: weights, neuron counts, fan-out tables
+    crossbars, cim_init = {}, {}
+    fanout = 1
+    entries_of = {}  # owner unit -> [(seg, slot, axon_base, row_lo, row_hi)]
+    for gi, g in enumerate(groups):
+        owner = placement[gi]
+        ent = []
+        for gj in by_layer.get(g.layer + 1, []):
+            nxt = groups[gj]
+            for t, (c0, c1) in enumerate(nxt.col_edges):
+                lo, hi = max(0, c0 - g.r0), min(g.n_rows, c1 - g.r0)
+                if lo < hi:
+                    u = placement[gj] + t
+                    ent.append((cim_seg[u], cim_slot[u], g.r0 - c0, lo, hi))
+        entries_of[owner] = ent
+        fanout = max(fanout, len(ent))
+
+    for gi, g in enumerate(groups):
+        l = layers[g.layer]
         p = l.params
-        g, g_next = placement[i], placement[i + 1] if i + 1 < n_layers else -1
-        cim_init[g] = {
-            "mode": isa.CIM_MODE_SPIKE,
-            "rows": l.n_out,
-            "cols": l.n_in,
-            "thresh": p.thresh,
-            "leak": p.leak,
-            "refrac_period": p.refrac_period,
-            "tick_period": tick_period,
-            "next_tick": tick_period,  # global tick grid: P_k = (k+1)·period
-            "dst_seg": cim_seg[g_next] if g_next >= 0 else -1,
-            "dst_slot": cim_slot[g_next] if g_next >= 0 else 0,
-            "axon_base": 0,
-        }
+        owner = placement[gi]
+        for t, (c0, c1) in enumerate(g.col_edges):
+            u = owner + t
+            crossbars[u] = np.asarray(l.weights[g.r0:g.r1, c0:c1], np.int8)
+            ent = entries_of[owner] if t == 0 else []
+            pad = fanout - len(ent)
+            cim_init[u] = {
+                "mode": isa.CIM_MODE_SPIKE,
+                "rows": g.n_rows if t == 0 else 0,
+                "cols": c1 - c0,
+                "thresh": p.thresh,
+                "leak": p.leak,
+                "refrac_period": p.refrac_period,
+                "tick_period": tick_period,
+                "next_tick": tick_period,  # global tick grid: P_k = (k+1)·period
+                "owner_slot": cim_slot[owner],
+                "dst_seg": np.array([e[0] for e in ent] + [-1] * pad, np.int32),
+                "dst_slot": np.array([e[1] for e in ent] + [0] * pad, np.int32),
+                "axon_base": np.array([e[2] for e in ent] + [0] * pad, np.int32),
+                "row_lo": np.array([e[3] for e in ent] + [0] * pad, np.int32),
+                "row_hi": np.array([e[4] for e in ent] + [0] * pad, np.int32),
+            }
     cfg, states, pending = sg.build(
         descs, crossbars=crossbars, cim_init=cim_init,
         channel_latency=channel_latency, local_latency=local_latency,
         use_kernel=use_kernel,
     )
-    g0, g_out = placement[0], placement[-1]
-    pending = _inject_raster(pending, cfg.n_segments, cim_seg[g0], cim_slot[g0],
-                             raster, tick_period)
+    in_tiles = [
+        [(cim_seg[placement[gi] + t], cim_slot[placement[gi] + t])
+         for t in range(groups[gi].width)]
+        for gi in by_layer[0]
+    ]
+    pending = _inject_raster(pending, cfg.n_segments, in_tiles, raster,
+                             tick_period)
+    unit_at = lambda gi, t=0: (cim_seg[placement[gi] + t],
+                               cim_slot[placement[gi] + t])
     meta = {
-        "in_unit": (cim_seg[g0], cim_slot[g0]),
-        "out_unit": (cim_seg[g_out], cim_slot[g_out]),
+        "in_unit": in_tiles[0][0],
+        "out_unit": unit_at(by_layer[n_layers - 1][0]),
         "n_out": layers[-1].n_out,
-        "unit_of_layer": [(cim_seg[placement[i]], cim_slot[placement[i]])
-                          for i in range(n_layers)],
+        "out_groups": [
+            (*unit_at(gi), groups[gi].r0, groups[gi].r1)
+            for gi in by_layer[n_layers - 1]
+        ],
+        "unit_of_layer": [unit_at(by_layer[l][0]) for l in range(n_layers)],
+        "groups": [
+            {"group": groups[gi],
+             "units": [unit_at(gi, t) for t in range(groups[gi].width)]}
+            for gi in range(len(groups))
+        ],
     }
     return cfg, states, pending, meta
 
 
-def _inject_raster(pending, n_segments, seg0, slot0, raster, tick_period):
-    """Pre-schedule the input spike train as AER events in seg0's inbox."""
+def _inject_raster(pending, n_segments, in_tiles, raster, tick_period):
+    """Pre-schedule the input spike train as AER events.
+
+    Every stripe of layer 0 integrates the full raster (row sharding fans
+    inputs out), so each event is replicated once per stripe, addressed to
+    the column tile covering its axon.  Events land in the inboxes of the
+    segments hosting those tiles; each inbox keeps half its capacity free
+    for runtime spike traffic.
+    """
     raster = np.asarray(raster)
     ts, axons = np.nonzero(raster)
-    n = len(ts)
-    assert n <= pf.IN_CAP // 2, \
-        f"{n} input events overflow the inbox; shorten or thin the raster"
+    vals = raster[ts, axons]
+    seg_l, addr_l, data_l, t_l = [], [], [], []
+    for tiles in in_tiles:
+        segs = np.array([sk[0] for sk in tiles], np.int32)
+        slots = np.array([sk[1] for sk in tiles], np.int32)
+        tidx = axons // XBAR
+        seg_l.append(segs[tidx])
+        addr_l.append((slots[tidx] << 16) | (axons % XBAR))
+        data_l.append(vals)
+        t_l.append((ts + 1) * tick_period)
+    ev = {
+        "seg": np.concatenate(seg_l) if seg_l else np.zeros(0, np.int32),
+        "addr": np.concatenate(addr_l) if addr_l else np.zeros(0, np.int32),
+        "data": np.concatenate(data_l) if data_l else np.zeros(0, np.int32),
+        "t": np.concatenate(t_l) if t_l else np.zeros(0, np.int32),
+    }
     boxes = {f: np.zeros((n_segments, pf.IN_CAP), np.int32)
              for f in ("kind", "addr", "data", "t_avail")}
-    from repro.core import channel as ch
-    boxes["kind"][seg0, :n] = ch.MSG_SPIKE
-    boxes["addr"][seg0, :n] = (slot0 << 16) | axons
-    boxes["data"][seg0, :n] = raster[ts, axons]
-    boxes["t_avail"][seg0, :n] = (ts + 1) * tick_period
     valid = np.zeros((n_segments, pf.IN_CAP), bool)
-    valid[seg0, :n] = True
     count = np.zeros((n_segments,), np.int32)
-    count[seg0] = n
+    from repro.core import channel as ch
+    for s in range(n_segments):
+        m = ev["seg"] == s
+        n = int(m.sum())
+        assert n <= pf.IN_CAP // 2, \
+            f"{n} input events overflow segment {s}'s inbox; shorten or " \
+            "thin the raster (wide layers replicate events per stripe)"
+        boxes["kind"][s, :n] = ch.MSG_SPIKE
+        boxes["addr"][s, :n] = ev["addr"][m]
+        boxes["data"][s, :n] = ev["data"][m]
+        boxes["t_avail"][s, :n] = ev["t"][m]
+        valid[s, :n] = True
+        count[s] = n
     out = {f: jnp.asarray(v) for f, v in boxes.items()}
     out["valid"] = jnp.asarray(valid)
     out["count"] = jnp.asarray(count)
@@ -184,9 +462,12 @@ def _inject_raster(pending, n_segments, seg0, slot0, raster, tick_period):
 
 
 def output_spike_counts(states, meta) -> np.ndarray:
-    """Per-neuron emitted-spike counts of the output layer."""
-    s, k = meta["out_unit"]
-    return np.asarray(states["cims"]["spike_counts"][s, k, : meta["n_out"]])
+    """Per-neuron emitted-spike counts of the output layer, merged across
+    its stripes by global neuron id."""
+    counts = np.zeros(meta["n_out"], np.int64)
+    for s, k, r0, r1 in meta["out_groups"]:
+        counts[r0:r1] = np.asarray(states["cims"]["spike_counts"][s, k, : r1 - r0])
+    return counts
 
 
 def total_spikes(states) -> int:

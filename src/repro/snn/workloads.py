@@ -40,8 +40,9 @@ def random_snn(layer_sizes=(64, 48, 10), seed: int = 0, w_lo: int = -4, w_hi: in
     return layers
 
 
-def oracle_run(layers, raster):
-    """Pure-jnp reference simulation; returns (output_counts, per_layer_totals)."""
+def _oracle(layers, raster):
+    """Shared oracle loop; returns (output_counts, per_layer_totals,
+    per_layer_per_neuron_totals, n_ticks)."""
     import jax.numpy as jnp
 
     t_steps, n_in = raster.shape
@@ -49,10 +50,11 @@ def oracle_run(layers, raster):
     assert layers[0].n_in == n_in
     states = [pool_state(l.n_out) for l in layers]
     prev = [jnp.zeros((l.n_out,), jnp.int32) for l in layers]
-    counts = jnp.zeros((layers[-1].n_out,), jnp.int32)
+    per_neuron = [np.zeros(l.n_out, np.int64) for l in layers]
     totals = np.zeros(n_layers, np.int64)
     zero_in = jnp.zeros((n_in,), jnp.int32)
-    for j in range(t_steps + n_layers + 1):
+    n_ticks = t_steps + n_layers + 1
+    for j in range(n_ticks):
         feeds = [jnp.asarray(raster[j], jnp.int32) if j < t_steps else zero_in]
         feeds += prev[:-1]
         new_prev = []
@@ -61,10 +63,23 @@ def oracle_run(layers, raster):
                 states[l], jnp.asarray(layer.weights), feeds[l], layer.params
             )
             new_prev.append(fired)
+            per_neuron[l] += np.asarray(fired, np.int64)
             totals[l] += int(fired.sum())
         prev = new_prev
-        counts = counts + prev[-1]
-    return np.asarray(counts), totals
+    return per_neuron[-1].copy(), totals, per_neuron, n_ticks
+
+
+def oracle_run(layers, raster):
+    """Pure-jnp reference simulation; returns (output_counts, per_layer_totals)."""
+    counts, totals, _, _ = _oracle(layers, raster)
+    return counts, totals
+
+
+def oracle_rates(layers, raster):
+    """Profiling pass: per-layer per-neuron emitted-spike totals + the tick
+    count — the inputs to snn/topology.profile_traffic's traffic matrix."""
+    _, _, per_neuron, n_ticks = _oracle(layers, raster)
+    return per_neuron, n_ticks
 
 
 @dataclasses.dataclass

@@ -40,7 +40,7 @@ class CIMParams:
     w_res: int = 8
 
 
-def cim_state(n_slots: int):
+def cim_state(n_slots: int, snn_fanout: int = 1):
     z = lambda *s, dt=jnp.int32: jnp.zeros(s, dt)
     return {
         "present": jnp.zeros((n_slots,), jnp.bool_),
@@ -72,9 +72,19 @@ def cim_state(n_slots: int):
         "refrac_period": z(n_slots),
         "tick_period": z(n_slots),  # SNN tick pitch (0 = never ticks)
         "next_tick": z(n_slots),  # sim time of the next scheduled tick
-        "dst_seg": jnp.full((n_slots,), -1, jnp.int32),  # -1 = sink (count only)
-        "dst_slot": z(n_slots),
-        "axon_base": z(n_slots),  # dst axon = axon_base + neuron index
+        # AER fan-out table, one row per destination (wide layers fan a
+        # stripe's spikes out to every downstream shard): neuron rows in
+        # [row_lo, row_hi) route to (dst_seg, dst_slot) at axon
+        # axon_base + row.  dst_seg -1 = unused entry (all -1 = sink).
+        "dst_seg": jnp.full((n_slots, snn_fanout), -1, jnp.int32),
+        "dst_slot": z(n_slots, snn_fanout),
+        "axon_base": z(n_slots, snn_fanout),
+        "row_lo": z(n_slots, snn_fanout),
+        "row_hi": jnp.full((n_slots, snn_fanout), XBAR, jnp.int32),
+        # column-tile wiring: slot index of the stripe owner this tile
+        # forwards its synaptic charge to at tick time (self = owner).
+        # Contributor tiles hold no neurons (rows == 0, membrane pinned 0).
+        "owner_slot": jnp.arange(n_slots, dtype=jnp.int32),
         "spike_counts": z(n_slots, XBAR),  # emitted spikes per neuron
         "spikes_total": z(n_slots),
         "ticks": z(n_slots),
@@ -171,7 +181,7 @@ def finish_ops(cims, t_end, use_kernel: bool = False):
     return cims, done
 
 
-def snn_tick(cims, t_gate, use_kernel: bool = False):
+def snn_tick(cims, t_gate, use_kernel: bool = False, grouped: bool = False):
     """Quantum-boundary LIF tick for spike-mode units (snn/ subsystem).
 
     A unit fires its tick at scheduled time T = ``next_tick`` once
@@ -186,6 +196,16 @@ def snn_tick(cims, t_gate, use_kernel: bool = False):
     never skipped.  Bit-identical across all controller backends and all
     segmentations by construction.
 
+    ``grouped`` (static; cfg.snn_grouped) enables multi-crossbar layers:
+    a neuron stripe whose fan-in exceeds one crossbar's columns occupies a
+    *column group* of co-located slots — the owner holds the membrane
+    state, contributor tiles hold column slices of the synapse matrix and
+    forward their charge (an exact int32 partial contraction) to the owner
+    within the same tick.  Co-location in one segment is what makes the
+    reduction tick-atomic: every member sees the same t_gate, so the group
+    fires in lockstep and the summed charge equals the unsharded
+    contraction bit-for-bit.
+
     Returns (cims', fired_rows bool (U, XBAR), fired bool (U,),
     tick_time (U,)) — the platform turns fired rows into AER MSG_SPIKE
     events (or spike_counts for sink units) stamped at the tick time.
@@ -196,20 +216,57 @@ def snn_tick(cims, t_gate, use_kernel: bool = False):
         & (cims["tick_period"] > 0)
         & (t_gate >= cims["next_tick"] + cims["tick_period"])
     )
-    if use_kernel:
-        from repro.kernels.lif_step.ops import lif_step_units
+    is_contrib = None
+    if grouped:
+        from repro.kernels.lif_step import ref as lif_ref
+
+        n_slots = cims["present"].shape[0]
+        is_contrib = cims["owner_slot"] != jnp.arange(n_slots)
+        # contributor tiles flush their charge only on a firing tick (the
+        # whole group fires in lockstep: same segment, same wiring)
+        fwd = is_contrib & fire
+        charge = jax.vmap(lif_ref.syn_charge)(cims["weights"], cims["in_buf"])
+        extra = jnp.zeros_like(charge).at[
+            jnp.where(fwd, cims["owner_slot"], n_slots)
+        ].add(jnp.where(fwd[:, None], charge, 0), mode="drop")
+        if use_kernel:
+            # the fused kernel redoes the local contraction on the MXU (the
+            # fp32 result is bit-equal to the int32 ``charge``); merging the
+            # group happens through its extra-charge input
+            from repro.kernels.lif_step.ops import lif_step_units
+
+            v2, refrac2, fired_i = lif_step_units(
+                cims["weights"], cims["in_buf"], cims["v"], cims["refrac"],
+                cims["thresh"], cims["leak"], cims["refrac_period"], extra,
+            )
+        else:
+            # charge is already in hand for every slot: run only the
+            # post-contraction LIF stages on the group-summed charge
+            v2, refrac2, fired_i = jax.vmap(lif_ref.lif_update)(
+                charge + extra, cims["v"], cims["refrac"],
+                cims["thresh"], cims["leak"], cims["refrac_period"],
+            )
     else:
-        from repro.kernels.lif_step.ref import lif_step_units
-    v2, refrac2, fired_i = lif_step_units(
-        cims["weights"], cims["in_buf"], cims["v"], cims["refrac"],
-        cims["thresh"], cims["leak"], cims["refrac_period"],
-    )
+        if use_kernel:
+            from repro.kernels.lif_step.ops import lif_step_units
+        else:
+            from repro.kernels.lif_step.ref import lif_step_units
+        v2, refrac2, fired_i = lif_step_units(
+            cims["weights"], cims["in_buf"], cims["v"], cims["refrac"],
+            cims["thresh"], cims["leak"], cims["refrac_period"],
+        )
     rows_idx = jnp.arange(XBAR)
     fired_rows = fire[:, None] & (fired_i != 0) & (rows_idx[None, :] < cims["rows"][:, None])
     cims = dict(cims)
     sel = lambda new, old: jnp.where(fire[:, None], new, old)
     cims["v"] = sel(v2, cims["v"])
     cims["refrac"] = sel(refrac2, cims["refrac"])
+    if grouped:
+        # contributor tiles hold no neurons — their lanes ran the fused
+        # update on a meaningless local contraction; pin membrane state to
+        # zero so termination checks and readback never see ghost charge
+        cims["v"] = jnp.where(is_contrib[:, None], 0, cims["v"])
+        cims["refrac"] = jnp.where(is_contrib[:, None], 0, cims["refrac"])
     cims["in_buf"] = jnp.where(fire[:, None], 0, cims["in_buf"])
     tick_time = cims["next_tick"]
     cims["next_tick"] = cims["next_tick"] + jnp.where(fire, cims["tick_period"], 0)

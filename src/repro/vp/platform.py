@@ -49,6 +49,11 @@ class VPConfig:
     has_snn: bool = False  # any spike-mode unit wired at build time; gates
                            # the per-quantum LIF tick so dense-only builds
                            # never pay the batched synapse contraction
+    snn_fanout: int = 1  # AER fan-out table entries per unit (wide layers
+                         # route a stripe's spikes to several downstream
+                         # shards); sized by the builder from the wiring
+    snn_grouped: bool = False  # any multi-crossbar column group wired; gates
+                               # the tick-time charge reduction (cim.snn_tick)
     # static wiring: global cim id -> (segment, slot); manager cpu segment
     cim_seg: tuple = ()
     cim_slot: tuple = ()
@@ -72,7 +77,7 @@ def segment_state(cfg: VPConfig):
         "dram": memory.dram_state(DRAM_BACKING),
         "dram_present": jnp.zeros((), jnp.bool_),
         "scratch": jnp.zeros((SCRATCH_WORDS,), jnp.int32),
-        "cims": cim_mod.cim_state(cfg.n_cim_slots),
+        "cims": cim_mod.cim_state(cfg.n_cim_slots, cfg.snn_fanout),
         "stats": {
             "instrs": jnp.zeros((), jnp.int32),
             "msgs": jnp.zeros((), jnp.int32),
@@ -425,20 +430,29 @@ def make_segment_step(cfg: VPConfig, quantum: int):
         # --- SNN tick at the quantum boundary: LIF integration + AER out ---
         if cfg.has_snn:
             cims, fired_rows, _, tick_time = cim_mod.snn_tick(
-                st["cims"], t_inbox, cfg.use_kernel
+                st["cims"], t_inbox, cfg.use_kernel, cfg.snn_grouped
             )
             st["cims"] = cims
             rows = jnp.arange(cim_mod.XBAR)
             for u in range(cfg.n_cim_slots):
-                # axons past the 16-bit AER field would carry into the slot
-                # bits and misroute; drop them at the source instead
-                dst_axon = cims["axon_base"][u] + rows
-                emit = fired_rows[u] & (cims["dst_seg"][u] >= 0) & (dst_axon < (1 << 16))
-                outbox = ch.box_append_bulk(
-                    outbox, emit, ch.MSG_SPIKE, cims["dst_seg"][u],
-                    (cims["dst_slot"][u] << 16) | dst_axon,
-                    jnp.ones((), jnp.int32), tick_time[u],
-                )
+                for d in range(cfg.snn_fanout):
+                    # fan-out entry d routes neuron rows [row_lo, row_hi) to
+                    # (dst_seg, dst_slot) at axon axon_base + row; axons past
+                    # the 16-bit AER field would carry into the slot bits and
+                    # misroute; drop them at the source instead
+                    dst_axon = cims["axon_base"][u, d] + rows
+                    emit = (
+                        fired_rows[u]
+                        & (cims["dst_seg"][u, d] >= 0)
+                        & (rows >= cims["row_lo"][u, d])
+                        & (rows < cims["row_hi"][u, d])
+                        & (dst_axon >= 0) & (dst_axon < (1 << 16))
+                    )
+                    outbox = ch.box_append_bulk(
+                        outbox, emit, ch.MSG_SPIKE, cims["dst_seg"][u, d],
+                        (cims["dst_slot"][u, d] << 16) | dst_axon,
+                        jnp.ones((), jnp.int32), tick_time[u],
+                    )
         st["stats"] = dict(st["stats"])
         st["stats"]["msgs"] = st["stats"]["msgs"] + outbox["count"]
         # sticky watermark: box_append* clips past-capacity appends onto the
