@@ -30,6 +30,7 @@ def run(strategy: str, mode: str = "cim", layers=None, quantum=QUANTUM):
             "layer": layer.name, "h": layer.h, "w": layer.w, "p": layer.p,
             "sq_s": t_sq, "pll_s": t_pll, "speedup": t_sq / t_pll,
             "sim_cycles": cyc, "correct": ok,
+            "pll_rounds_per_s": ctl_p.rounds_run / t_pll,
         })
     return rows
 
@@ -39,7 +40,8 @@ def main(out=print):
         rows = run(strategy)
         for r in rows:
             out(f"{fig}/{strategy}/{r['layer']},{r['sq_s']*1e6:.0f},"
-                f"sq_vs_pll_speedup={r['speedup']:.2f}x sim_cycles={r['sim_cycles']} ok={r['correct']}")
+                f"sq_vs_pll_speedup={r['speedup']:.2f}x sim_cycles={r['sim_cycles']} "
+                f"pll_rounds_per_s={r['pll_rounds_per_s']:.0f} ok={r['correct']}")
         mean = np.mean([r["speedup"] for r in rows])
         best = max(r["speedup"] for r in rows)
         out(f"{fig}/{strategy}/SUMMARY,0,mean={mean:.2f}x best={best:.2f}x "

@@ -34,13 +34,13 @@ WIDE_SIZES = (128, 600, 64)  # 600 out -> 3 row stripes; 600 in -> 3-tile group
 WIDE_T_STEPS = 10
 
 
-def _timed(cfg, states, pending, backend, max_rounds=400):
+def _timed(cfg, states, pending, backend, max_rounds=400, fused=None):
     warm = Controller(cfg, states, pending, backend=backend, quantum=QUANTUM)
-    warm.round()  # compile
-    jax.block_until_ready(warm._states_l if warm._list_mode else warm.states)
+    warm.run(max_rounds=2, check_every=2, fused=fused)  # compile round + megastep
+    warm.block_until_ready()
     ctl = Controller(cfg, states, pending, backend=backend, quantum=QUANTUM)
     t0 = time.perf_counter()
-    ctl.run(max_rounds=max_rounds, check_every=2)
+    ctl.run(max_rounds=max_rounds, check_every=2, fused=fused)
     host = time.perf_counter() - t0
     return host, ctl
 
@@ -69,9 +69,57 @@ def run(strategies=("uniform", "load_oriented", "auto"), sizes=SIZES,
             "sq_s": t_sq, "pll_s": t_pll, "speedup": t_sq / t_pll,
             "spikes": spikes,
             "sq_spikes_per_s": spikes / t_sq, "pll_spikes_per_s": spikes / t_pll,
+            "rounds": ctl_pll.rounds_run,
+            "pll_rounds_per_s": ctl_pll.rounds_run / t_pll,
             "correct": ok,
         })
     return rows
+
+
+MEGA_SIZES = (16, 12, 8)  # small = dispatch-bound: right-sized caps, no CPUs
+MEGA_T_STEPS = 96
+MEGA_CAPS = dict(in_cap=640, out_cap=128)  # holds the raster + AER bursts;
+                                           # undersizing raises loudly
+
+
+def run_megaloop(sizes=MEGA_SIZES, t_steps=MEGA_T_STEPS, seed=2):
+    """Device-resident megaloop vs per-round dispatch on the small scenario.
+
+    Same workload, same vmap backend, same check cadence — the only change
+    is whether the exec+sync rounds run inside one jitted lax.while_loop
+    (one host sync per dispatch) or one jitted call per round with a fused
+    host-side done check every other round.  Final states must be
+    bit-identical; the win is pure dispatch + sync overhead, which is why
+    the scenario is the *small* hundred-round network with workload-sized
+    channel caps (a CPU-free event-driven platform): per-round host
+    overhead is a fixed cost, so it dominates exactly when rounds are
+    cheap.  Best-of-3 runs per mode to tame container noise.
+    """
+    job = snn.snn_inference_job(sizes, t_steps=t_steps, rate=0.2, seed=seed)
+    descs = snn.segmentation_for(len(job.layers), "uniform", n_segments=2)
+    cfg, states, pending, meta = snn.build_snn(job.layers, descs, job.raster,
+                                               **MEGA_CAPS)
+    t_per = t_mega = float("inf")
+    for _ in range(3):
+        t, ctl_per = _timed(cfg, states, pending, "vmap", fused=False)
+        t_per = min(t_per, t)
+        t, ctl_mega = _timed(cfg, states, pending, "vmap", fused=True)
+        t_mega = min(t_mega, t)
+    identical = ctl_per.rounds_run == ctl_mega.rounds_run
+    per_st, mega_st = ctl_per.result_states(), ctl_mega.result_states()
+    for a, b in zip(jax.tree.leaves(per_st), jax.tree.leaves(mega_st)):
+        identical &= bool(np.array_equal(np.asarray(a), np.asarray(b)))
+    counts = snn.output_spike_counts(mega_st, meta)
+    identical &= bool(np.array_equal(counts, job.expected_counts))
+    per_rps = ctl_per.rounds_run / t_per
+    mega_rps = ctl_mega.rounds_run / t_mega
+    return {
+        "rounds": ctl_mega.rounds_run,
+        "per_round_s": t_per, "mega_s": t_mega,
+        "per_round_rps": per_rps, "mega_rps": mega_rps,
+        "speedup": mega_rps / per_rps,
+        "identical": identical,
+    }
 
 
 def run_wide(sizes=WIDE_SIZES, t_steps=WIDE_T_STEPS, seed=4):
@@ -121,7 +169,15 @@ def main(out=print):
             f" spikes={r['spikes']}"
             f" sq_spk_per_s={r['sq_spikes_per_s']:.0f}"
             f" pll_spk_per_s={r['pll_spikes_per_s']:.0f}"
+            f" pll_rounds_per_s={r['pll_rounds_per_s']:.0f}"
             f" segments={r['segments']} ok={r['correct']}")
+    m = run_megaloop()
+    mega_net = "x".join(str(s) for s in MEGA_SIZES)
+    out(f"megaloop/vmap/{mega_net},{m['per_round_s']*1e6:.0f},"
+        f"mega_rounds_per_s={m['mega_rps']:.0f}"
+        f" per_round_rounds_per_s={m['per_round_rps']:.0f}"
+        f" speedup={m['speedup']:.2f}x rounds={m['rounds']}"
+        f" ok={m['identical']}")
     wide = run_wide()
     wide_net = "x".join(str(s) for s in WIDE_SIZES)
     base = wide[0]

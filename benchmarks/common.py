@@ -5,7 +5,6 @@ from __future__ import annotations
 import os
 import time
 
-import jax
 import numpy as np
 
 from repro.core import segmentation as sg
@@ -52,14 +51,20 @@ def build_workload(layer: wl.Layer, strategy: str, mode: str, channel_latency: i
     return cfg, states, pending, job
 
 
-def timed_run(cfg, states, pending, backend: str, quantum: int, max_rounds=2000):
-    """Warm-compile, then run to completion; returns (host_s, sim_cycles, ctl)."""
+def timed_run(cfg, states, pending, backend: str, quantum: int, max_rounds=2000,
+              fused=None):
+    """Warm-compile, then run to completion; returns (host_s, sim_cycles, ctl).
+
+    ``fused`` is forwarded to ``Controller.run`` (None = backend default:
+    the device-resident megaloop on vmap/shard_map, the per-round host loop
+    on sequential/threads).  Rounds/sec is ``ctl.rounds_run / host_s``.
+    """
     warm = Controller(cfg, states, pending, backend=backend, quantum=quantum)
-    warm.round()  # compile
-    jax.block_until_ready(warm._states_l if warm._list_mode else warm.states)
+    warm.run(max_rounds=2, check_every=2, fused=fused)  # compile round + megastep
+    warm.block_until_ready()
     ctl = Controller(cfg, states, pending, backend=backend, quantum=quantum)
     t0 = time.perf_counter()
-    rounds, _ = ctl.run(max_rounds=max_rounds, check_every=2)
+    rounds, _ = ctl.run(max_rounds=max_rounds, check_every=2, fused=fused)
     host = time.perf_counter() - t0
     return host, int(np.max(ctl.sim_time())), ctl
 

@@ -64,6 +64,11 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="unscaled Table III dimensions "
                          "(equivalent to REPRO_FULL_BENCH=1; much slower)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any emitted line carries a failed "
+                         "verification flag (ok=False / correct=False / "
+                         "supported=False) — CI smoke: perf runs cannot "
+                         "silently break correctness")
     args = ap.parse_args(argv)
     if args.full:
         os.environ["REPRO_FULL_BENCH"] = "1"  # before benchmarks.common import
@@ -101,6 +106,17 @@ def main(argv=None) -> None:
                        "full": bool(os.environ.get("REPRO_FULL_BENCH") == "1")},
                       f, indent=2)
         print(f"# json report -> {args.json}")
+    if args.check:
+        bad = [line for sec in report.values() for line in sec["lines"]
+               if any(flag in line for flag in
+                      ("ok=False", "correct=False", "supported=False"))]
+        if bad:
+            print(f"# VERIFICATION FAILED on {len(bad)} line(s):", file=sys.stderr)
+            for line in bad:
+                print(f"#   {line}", file=sys.stderr)
+            sys.exit(1)
+        print(f"# verification flags clean across "
+              f"{sum(len(s['lines']) for s in report.values())} lines")
 
 
 if __name__ == "__main__":

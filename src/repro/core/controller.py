@@ -20,6 +20,18 @@ Backends for the ``exec`` phase (DESIGN.md §2):
 
 All four produce bit-identical simulation results (property-tested): time
 decoupling changes wall-clock interleaving, never simulated semantics.
+
+The stacked backends (``vmap``/``shard_map``) additionally run the round
+loop itself device-resident: ``run()`` dispatches a fused *megastep* — one
+jitted ``jax.lax.while_loop`` that executes up to ``rounds_per_dispatch``
+exec+sync rounds per host dispatch, evaluating the termination predicate
+and the sticky overflow watermarks on-device (``platform.termination_flags``)
+so the host syncs one tiny scalar tuple per dispatch instead of four
+``bool(jnp.any(...))`` round-trips per ``check_every`` rounds.  Results,
+round counts, and overflow errors are bit-identical to per-round execution
+(``fused=False``).  ``sequential``/``threads`` keep their honest host-side
+per-round loop (they *are* the host-scheduling baselines) but share the
+fused single-sync done-reducer.
 """
 from __future__ import annotations
 
@@ -55,6 +67,18 @@ class Controller:
         # arrays must not be shared with this controller
         self.states = jax.tree.map(jnp.copy, self.states)
         self.pending = jax.tree.map(jnp.copy, self.pending)
+        # the CPU-free fast path (VPConfig.has_cpu=False: no slot scan, no
+        # MMIO inbox handling, no dense completion) is only valid while
+        # nothing but AER spikes can circulate.  The builder guarantees that
+        # for its own wiring, but callers may hand-inject MMIO/DMA messages
+        # into the initial pending box — detect that once and fall back to
+        # the full step (one host check at construction, never per round)
+        if not self.cfg.has_cpu:
+            injected = np.asarray(
+                self.pending["valid"] & (self.pending["kind"] != ch.MSG_SPIKE)
+            )
+            if injected.any():
+                self.cfg = dataclasses.replace(self.cfg, has_cpu=True)
         self.lat = self.cfg.latency_matrix()
         # sequential/threads keep per-segment state as persistent lists —
         # the honest "sq" baseline must not pay per-round slice/stack of the
@@ -65,38 +89,102 @@ class Controller:
             take = lambda t, i: jax.tree.map(lambda x: x[i], t)
             self._states_l = [take(self.states, i) for i in range(s)]
             self._pending_l = [take(self.pending, i) for i in range(s)]
+        # threads backend: one persistent pool for the controller's life —
+        # creating and tearing down a ThreadPoolExecutor every round would
+        # penalize the paper's literal parallel mechanism with pure host
+        # overhead (thread spawn/join per quantum)
+        self._pool = (
+            cf.ThreadPoolExecutor(max_workers=self.cfg.n_segments,
+                                  thread_name_prefix="vp-seg")
+            if self.backend == "threads" else None
+        )
         step = pf.make_segment_step(self.cfg, self.quantum)
         s = self.cfg.n_segments
         big = jnp.int32(2**30)
+        # locals, NOT self.*, inside the jitted closures below: _FN_CACHE
+        # outlives controllers, and a closure over `self` would pin the
+        # first instance's entire copied state (MB of DRAM image per
+        # segment) for process lifetime
+        cfg = self.cfg
+        lat = self.lat
+        quantum = self.quantum
 
         def limits(times):
             # limit_i = min_{j != i}(t_j + lat[j, i]); single segment: t + q
-            tl = times[:, None] + self.lat  # (src, dst)
+            tl = times[:, None] + lat  # (src, dst)
             eye = jnp.eye(s, dtype=bool)
             tl = jnp.where(eye, big, tl)
             lim = tl.min(axis=0)
             if s == 1:
-                lim = times + self.quantum
+                lim = times + quantum
             return lim
 
         def vmap_round(states, pending):
             lim = limits(states["time"])
             states, outboxes, pending = jax.vmap(step)(states, pending, lim)
-            fresh = ch.route(outboxes, self.lat, pf.IN_CAP)
+            fresh = ch.route(outboxes, lat, cfg.in_cap)
             pending = jax.vmap(ch.merge_pending)(pending, fresh)
             return states, pending
+
+        def megaloop(round_fn):
+            """Device-resident round loop: up to ``k`` rounds of ``round_fn``
+            inside one ``lax.while_loop``, with the termination predicate and
+            sticky overflow watermarks evaluated in traced code at the same
+            points the host loop would (every ``check_every``-th round since
+            ``run()`` started, ``r0`` rounds ago).  The host sees one scalar
+            tuple per dispatch.  ``done`` means clean termination; ``over``
+            means a watermark tripped at a check point — the host re-raises
+            with the detailed message (the loop stops at the same round the
+            per-round path would, so the message is identical too)."""
+
+            def mega(states, pending, r0, k, check_every):
+                def cond(carry):
+                    _, _, i, done, over = carry
+                    return ~(done | over) & (i < k)
+
+                def body(carry):
+                    st, pen, i, _, _ = carry
+                    st, pen = round_fn(st, pen)
+                    i = i + 1
+                    at_check = ((r0 + i) % check_every) == 0
+
+                    def checked(_):
+                        done, in_over, out_over = pf.termination_flags(
+                            st, pen, cfg.in_cap, cfg.out_cap)
+                        over = in_over | out_over
+                        return done & ~over, over
+
+                    # cond, not where: non-check rounds skip the reductions
+                    done, over = jax.lax.cond(
+                        at_check, checked,
+                        lambda _: (jnp.array(False), jnp.array(False)), None)
+                    return st, pen, i, done, over
+
+                zero, false = jnp.int32(0), jnp.array(False)
+                return jax.lax.while_loop(
+                    cond, body, (states, pending, zero, false, false)
+                )
+
+            return mega
 
         key = (self.cfg, self.quantum, s)
         if key not in _FN_CACHE:
             _FN_CACHE[key] = {
                 "vmap_round": jax.jit(vmap_round, donate_argnums=(0, 1)),
+                "vmap_mega": jax.jit(megaloop(vmap_round), donate_argnums=(0, 1)),
+                "flags": jax.jit(
+                    lambda states, pending: jnp.stack(pf.termination_flags(
+                        states, pending, cfg.in_cap, cfg.out_cap))
+                ),
                 "step_one": jax.jit(step),
                 "limits": jax.jit(limits),
-                "route": jax.jit(lambda outboxes: ch.route(outboxes, self.lat, pf.IN_CAP)),
+                "route": jax.jit(lambda outboxes: ch.route(outboxes, lat, cfg.in_cap)),
                 "merge_one": jax.jit(ch.merge_pending, donate_argnums=(0,)),
             }
         fns = _FN_CACHE[key]
         self._vmap_round = fns["vmap_round"]
+        self._vmap_mega = fns["vmap_mega"]
+        self._flags_fn = fns["flags"]
         self._step_one = fns["step_one"]
         self._limits = fns["limits"]
         self._route = fns["route"]
@@ -120,7 +208,7 @@ class Controller:
                     st, outbox, pen = step(my, pen, lim)
                     all_out = jax.lax.all_gather(outbox, "segment")  # (S, cap)
                     t_avail = all_out["t_emit"] + self.lat[
-                        jnp.repeat(jnp.arange(s), pf.OUT_CAP).reshape(s, pf.OUT_CAP), i
+                        jnp.repeat(jnp.arange(s), self.cfg.out_cap).reshape(s, self.cfg.out_cap), i
                     ]
                     flat_valid = (all_out["valid"] & (all_out["dst"] == i)).reshape(-1)
                     rank = jnp.cumsum(flat_valid.astype(jnp.int32)) - 1
@@ -128,8 +216,8 @@ class Controller:
                     # "never write a dead slot" rule) so an exactly-full
                     # inbox keeps its last message instead of racing it
                     # against thousands of zero writes to the same slot
-                    pos = jnp.where(flat_valid, jnp.clip(rank, 0, pf.IN_CAP - 1), pf.IN_CAP)
-                    fresh = ch.empty_pending(pf.IN_CAP)
+                    pos = jnp.where(flat_valid, jnp.clip(rank, 0, self.cfg.in_cap - 1), self.cfg.in_cap)
+                    fresh = ch.empty_pending(self.cfg.in_cap)
                     for f, src in (("kind", all_out["kind"]), ("addr", all_out["addr"]),
                                    ("data", all_out["data"]), ("t_avail", t_avail)):
                         fresh[f] = fresh[f].at[pos].set(src.reshape(-1), mode="drop")
@@ -149,6 +237,10 @@ class Controller:
                 )(states, pending)
 
             self._shard_round = jax.jit(shard_round, donate_argnums=(0, 1))
+            # mesh-dependent, so per-instance rather than in _FN_CACHE; the
+            # while_loop wraps the shard_map call and the flags reduce over
+            # the sharded carry (XLA inserts the all-reduce)
+            self._shard_mega = jax.jit(megaloop(shard_round), donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------
     def round(self):
@@ -167,8 +259,7 @@ class Controller:
             if self.backend == "sequential":
                 results = [one(i) for i in range(s)]
             else:
-                with cf.ThreadPoolExecutor(max_workers=s) as ex:
-                    results = list(ex.map(one, range(s)))
+                results = list(self._pool.map(one, range(s)))
             self._states_l = [r[0] for r in results]
             stack = lambda xs: jax.tree.map(lambda *v: jnp.stack(v), *xs)
             outboxes = stack([r[1] for r in results])  # ~100 KB each: cheap
@@ -194,61 +285,113 @@ class Controller:
     def _check_overflow(self, pending=None, states=None):
         # loud overflow sentinels: merge_pending and the segment step keep
         # sticky high-water marks of the capacity they needed; past-cap
-        # scatters clip onto the last slot (documented-nondeterministic
-        # overwrite), so any watermark beyond capacity means messages were
-        # silently corrupted at some point — even if the box drained since
+        # messages are silently lost (bulk appends/merges truncate, single
+        # appends clip onto the last slot), so any watermark beyond capacity
+        # means messages were dropped at some point — even if the box
+        # drained since
         pending = self._pending_stacked() if pending is None else pending
         watermark = np.asarray(pending["max_count"])
-        if (watermark > pf.IN_CAP).any():
+        if (watermark > self.cfg.in_cap).any():
             raise RuntimeError(
                 f"pending inbox overflow (watermark {watermark.tolist()} > "
-                f"{pf.IN_CAP}); raise IN_CAP or thin the workload's traffic"
+                f"{self.cfg.in_cap}); raise in_cap (builder kwarg) or thin "
+                "the workload's traffic"
             )
         states = self._stacked() if states is None else states
         out_peak = np.asarray(states["stats"]["outbox_peak"])
-        if (out_peak > pf.OUT_CAP).any():
+        if (out_peak > self.cfg.out_cap).any():
             raise RuntimeError(
-                f"outbox overflow (peak {out_peak.tolist()} > {pf.OUT_CAP}); "
-                "raise OUT_CAP or thin the workload's traffic"
+                f"outbox overflow (peak {out_peak.tolist()} > {self.cfg.out_cap}); "
+                "raise out_cap (builder kwarg) or thin the workload's traffic"
             )
 
     def done(self) -> bool:
-        states = self._stacked()
-        pending = self._pending_stacked()
-        self._check_overflow(pending, states)
-        cpus = states["cpu"]
-        active_cpu = bool(jnp.any(cpus["present"] & ~cpus["halted"]))
-        # a unit that is merely armed (CONFIG'd, state IN, no pending input)
-        # is not forward progress; only an in-flight OP blocks termination
-        busy_cim = bool(jnp.any(states["cims"]["state"] == 2))
-        # a spike-mode unit is busy while it has accumulated-but-unintegrated
-        # spikes OR an active neuron already at threshold (possible when a
-        # runtime CIM_REG_MODE write lowers thresh under a charged membrane):
-        # either will change observable state at the unit's next tick.  With
-        # an empty buffer and everyone subthreshold, leak alone can never
-        # cross threshold (leak >= 0, reset-to-zero), so idling is final.
-        # Units that never tick (tick_period == 0, e.g. flipped to spike mode
-        # at runtime without build-time wiring) can never drain — not busy.
-        from repro.vp import isa
+        """Termination check + loud overflow validation (one device sync).
 
-        cims = states["cims"]
-        ticking = (cims["mode"] == isa.CIM_MODE_SPIKE) & (cims["tick_period"] > 0)
-        pending_in = (cims["in_buf"] != 0).any(-1)
-        due = ((cims["v"] >= cims["thresh"][..., None]) & (cims["refrac"] == 0)).any(-1)
-        busy_snn = bool(jnp.any(ticking & (pending_in | due)))
-        msgs = bool(jnp.any(pending["valid"]))
-        return not (active_cpu or busy_cim or busy_snn or msgs)
+        The predicate itself lives in traced code
+        (``platform.termination_flags`` — see its docstring for the exact
+        semantics: running CPUs, in-flight CIM OPs, drainable spike-mode
+        work, pending messages); here it is evaluated as one fused jitted
+        call returning a single (3,) bool array, instead of four separate
+        ``bool(jnp.any(...))`` host round-trips.
+        """
+        d, in_over, out_over = np.asarray(
+            self._flags_fn(self._stacked(), self._pending_stacked())
+        )
+        if in_over or out_over:
+            self._check_overflow()  # raises with the detailed watermark message
+        return bool(d)
 
-    def run(self, max_rounds: int = 10_000, check_every: int = 4):
-        """Run to completion; returns (rounds, host_seconds)."""
-        t0 = _time.perf_counter()
-        for r in range(max_rounds):
-            self.round()
-            if (r + 1) % check_every == 0 and self.done():
-                break
+    def block_until_ready(self):
+        """Wait for this controller's device state to materialize.
+
+        Public replacement for benchmarks reaching into ``_states_l`` /
+        ``_list_mode``; returns self so warm-up reads chain."""
+        if self._list_mode:
+            jax.block_until_ready((self._states_l, self._pending_l))
         else:
-            self._check_overflow()  # done() may never have seen the last rounds
-        jax.block_until_ready(self._states_l if self._list_mode else self.states)
+            jax.block_until_ready((self.states, self.pending))
+        return self
+
+    def close(self):
+        """Release host resources (the threads backend's persistent pool)."""
+        if getattr(self, "_pool", None) is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def run(self, max_rounds: int = 10_000, check_every: int = 4,
+            fused: bool | None = None, rounds_per_dispatch: int = 256):
+        """Run to completion; returns (rounds, host_seconds).
+
+        ``vmap``/``shard_map`` default to the device-resident megaloop
+        (``fused=True``): up to ``rounds_per_dispatch`` rounds execute per
+        host dispatch inside one jitted ``lax.while_loop`` that checks the
+        termination predicate and overflow watermarks on-device at every
+        ``check_every``-th round — bit-identical results, ``rounds_run``,
+        and overflow errors to per-round execution (``fused=False``), the
+        host just syncs ~K× less often.  ``sequential``/``threads`` always
+        run the honest per-round host loop (they are the host-scheduling
+        baselines; see docs/architecture.md) with the fused done-reducer.
+        """
+        t0 = _time.perf_counter()
+        if rounds_per_dispatch < 1:
+            raise ValueError("rounds_per_dispatch must be >= 1")
+        if fused is None:
+            fused = self.backend in ("vmap", "shard_map")
+        if fused and self.backend in ("vmap", "shard_map"):
+            mega = self._vmap_mega if self.backend == "vmap" else self._shard_mega
+            done = over = False
+            ran = 0
+            while ran < max_rounds:
+                k = min(rounds_per_dispatch, max_rounds - ran)
+                self.states, self.pending, i, d, o = mega(
+                    self.states, self.pending,
+                    jnp.int32(ran), jnp.int32(k), jnp.int32(check_every),
+                )
+                i = int(i)  # the one host sync per dispatch
+                ran += i
+                self.rounds_run += i
+                done, over = bool(d), bool(o)
+                if done or over:
+                    break
+            if over or not done:
+                # a watermark tripped at a check point, or the loop exhausted
+                # max_rounds without the predicate ever seeing the last rounds
+                self._check_overflow()
+        else:
+            for r in range(max_rounds):
+                self.round()
+                if (r + 1) % check_every == 0 and self.done():
+                    break
+            else:
+                self._check_overflow()  # done() may never have seen the last rounds
+        self.block_until_ready()
         return self.rounds_run, _time.perf_counter() - t0
 
     # ------------------------------------------------------------------

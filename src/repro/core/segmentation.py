@@ -168,7 +168,9 @@ def traffic_partition(widths, loads, traffic, n_segments: int,
 
 def build(descs, *, programs=None, dram_words=None, crossbars=None,
           scratch_init=None, cim_init=None, channel_latency: int = 10_000,
-          local_latency: int = 64, use_kernel: bool = False):
+          local_latency: int = 64, use_kernel: bool = False,
+          in_cap: int | None = None, out_cap: int | None = None,
+          store_log: int | None = None):
     """Assemble the stacked simulation state.
 
     programs: {seg_id: asm_source or np.uint32 array}
@@ -179,6 +181,12 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
         e.g. spike-mode wiring (mode/thresh/leak/tick_period/dst_*, snn/).
         Preloading state is build-time configuration, like ``crossbars``;
         runtime reconfiguration goes through the MMIO registers.
+    in_cap/out_cap/store_log: channel-box and store-log capacities (default:
+        the generous ``platform`` module constants).  Every lane is touched
+        every round, so right-sizing these to the workload is the dominant
+        lever on small platforms' round cost; undersizing raises the loud
+        sticky-watermark RuntimeError, never silently corrupts, and results
+        are bit-identical across any caps that don't overflow.
     """
     assert channel_latency >= local_latency, \
         "intra-segment hops cannot be slower than cross-segment channels"
@@ -208,6 +216,17 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
             snn_grouped = True
     cfg = pf.VPConfig(
         n_segments=n,
+        in_cap=pf.IN_CAP if in_cap is None else in_cap,
+        out_cap=pf.OUT_CAP if out_cap is None else out_cap,
+        store_log=pf.STORE_LOG if store_log is None else store_log,
+        # a CPU whose segment has no program halts at build time below and
+        # can never un-halt, so only programmed CPUs make the instruction
+        # machinery live; without any (and no preset in-flight dense OP),
+        # the step statically drops the slot scan, store log, MMIO inbox
+        # handling, and dense-CIM completion (bit-identical — VPConfig.has_cpu)
+        has_cpu=(any(d.cpu and s in (programs or {}) for s, d in enumerate(descs))
+                 or any("state" in f or "busy_until" in f
+                        for f in (cim_init or {}).values())),
         # size slot state for the densest segment (>= Table II's 2) — a
         # descriptor exceeding the default would otherwise scatter-clobber
         n_cim_slots=max([2] + [d.n_cims for d in descs]),
@@ -283,7 +302,7 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
         states[s]["scratch"] = jnp.asarray(sc)
 
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-    pending = jax.vmap(lambda _: ch.empty_pending(pf.IN_CAP))(jnp.arange(n))
+    pending = jax.vmap(lambda _: ch.empty_pending(cfg.in_cap))(jnp.arange(n))
     return cfg, stacked, pending
 
 

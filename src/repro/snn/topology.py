@@ -45,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import segmentation as sg
-from repro.vp import isa, platform as pf
+from repro.vp import isa
 from repro.vp.cim import XBAR
 from repro.snn.neuron import LIFParams
 
@@ -290,7 +290,8 @@ def _default_placement(groups, descs):
 
 def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_000,
               channel_latency: int = 10_000, local_latency: int = 64,
-              use_kernel: bool = False):
+              use_kernel: bool = False, in_cap: int | None = None,
+              out_cap: int | None = None):
     """Assemble a runnable SNN simulation.
 
     layers: [SNNLayer, ...] feed-forward chain; layers wider than one
@@ -302,6 +303,11 @@ def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_00
         For single-crossbar layers this is the familiar layer -> unit list.
     raster: int (T, n_in) input spike counts; timestep k is integrated at
         layer 0's tick k (injected as pre-scheduled AER events)
+    in_cap/out_cap: channel-box capacities (see ``segmentation.build``) —
+        the inbox must hold the pre-scheduled raster events of its busiest
+        segment in half its capacity; event-driven runs with short rasters
+        can shrink both dramatically (the caps are the per-round cost on a
+        CPU-free platform, and undersizing raises loudly)
     Returns (cfg, states, pending, meta) ready for the Controller; meta
     locates the output units for spike-count readback.
     """
@@ -381,7 +387,7 @@ def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_00
     cfg, states, pending = sg.build(
         descs, crossbars=crossbars, cim_init=cim_init,
         channel_latency=channel_latency, local_latency=local_latency,
-        use_kernel=use_kernel,
+        use_kernel=use_kernel, in_cap=in_cap, out_cap=out_cap,
     )
     in_tiles = [
         [(cim_seg[placement[gi] + t], cim_slot[placement[gi] + t])
@@ -437,17 +443,19 @@ def _inject_raster(pending, n_segments, in_tiles, raster, tick_period):
         "data": np.concatenate(data_l) if data_l else np.zeros(0, np.int32),
         "t": np.concatenate(t_l) if t_l else np.zeros(0, np.int32),
     }
-    boxes = {f: np.zeros((n_segments, pf.IN_CAP), np.int32)
+    cap = pending["valid"].shape[1]  # the built platform's in_cap
+    boxes = {f: np.zeros((n_segments, cap), np.int32)
              for f in ("kind", "addr", "data", "t_avail")}
-    valid = np.zeros((n_segments, pf.IN_CAP), bool)
+    valid = np.zeros((n_segments, cap), bool)
     count = np.zeros((n_segments,), np.int32)
     from repro.core import channel as ch
     for s in range(n_segments):
         m = ev["seg"] == s
         n = int(m.sum())
-        assert n <= pf.IN_CAP // 2, \
-            f"{n} input events overflow segment {s}'s inbox; shorten or " \
-            "thin the raster (wide layers replicate events per stripe)"
+        assert n <= cap // 2, \
+            f"{n} input events overflow segment {s}'s inbox (cap {cap}); " \
+            "shorten or thin the raster, or raise in_cap (wide layers " \
+            "replicate events per stripe)"
         boxes["kind"][s, :n] = ch.MSG_SPIKE
         boxes["addr"][s, :n] = ev["addr"][m]
         boxes["data"][s, :n] = ev["data"][m]

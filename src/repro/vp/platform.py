@@ -33,6 +33,7 @@ from repro.vp import isa, memory, riscv
 PROG_WORDS = 512
 OUT_CAP = 4096
 IN_CAP = 4096
+STORE_LOG = 2048  # max local-DRAM stores per quantum
 DRAM_BACKING = 1 << 20  # words
 SCRATCH_WORDS = 1 << 12
 
@@ -46,6 +47,20 @@ class VPConfig:
     channel_latency: int = 10_000  # cycles; >= quantum (paper's rule)
     local_latency: int = 64  # intra-segment device message latency
     use_kernel: bool = False  # crossbar via Pallas kernel vs jnp ref
+    # channel-box capacities: the worst-case defaults are generous, but every
+    # message lane is touched every round (inbox masks, routing scatters,
+    # merge packs), so on small platforms the caps *are* the round cost.
+    # Builders may right-size them per workload — undersizing is always loud,
+    # never silent: the sticky watermarks raise past-cap (controller checks),
+    # and results are bit-identical across cap choices that don't overflow.
+    in_cap: int = IN_CAP
+    out_cap: int = OUT_CAP
+    store_log: int = STORE_LOG  # max local-DRAM stores per quantum
+    has_cpu: bool = True  # any CPU that can ever execute (present + program);
+                          # False statically drops the instruction-slot scan
+                          # and the DRAM store log from the step — a
+                          # build-time-halted CPU can never un-halt, so the
+                          # scan is provably dead (bit-identical) without it
     has_snn: bool = False  # any spike-mode unit wired at build time; gates
                            # the per-quantum LIF tick so dense-only builds
                            # never pay the batched synapse contraction
@@ -108,54 +123,61 @@ def _apply_inbox(cfg: VPConfig, st, pending):
     # else: no spike-mode units exist, so any stray MSG_SPIKE just drains
     # through m (no handler matches kind 5) instead of pending forever
 
-    # --- scratch DMA writes (masked lanes scatter out-of-bounds -> dropped;
-    # NEVER write a "dead slot" with the old value: duplicate scatter indices
-    # with different values are nondeterministic in XLA) ---
-    ms = m & (kind == ch.MSG_W_SCRATCH)
-    sc_idx = jnp.clip(addr, 0, SCRATCH_WORDS - 1)
-    scratch = st["scratch"].at[jnp.where(ms, sc_idx, SCRATCH_WORDS)].set(data, mode="drop")
-
-    # --- DRAM posted writes ---
-    md = m & (kind == ch.MSG_W_DRAM) & st["dram_present"]
-    d_idx = jnp.clip(addr, 0, DRAM_BACKING - 1)
-    dram = dict(st["dram"])
-    dram["data"] = dram["data"].at[jnp.where(md, d_idx, DRAM_BACKING)].set(data, mode="drop")
-    dram["writes"] = dram["writes"] + md.sum().astype(jnp.int32)
-
-    # --- CIM register writes (ordered) ---
     cims = st["cims"]
-    slot = addr >> 16
-    reg = addr & 0xFFFF
-    mc = m & (kind == ch.MSG_W_CIM)
-    # CONFIG: last write wins per slot
-    for u in range(cfg.n_cim_slots):
-        mu = mc & (slot == u)
-        mcfg = mu & (reg == isa.CIM_REG_CONFIG)
-        any_cfg = mcfg.any()
-        val = jnp.max(jnp.where(mcfg, data, -(2**31) + 1))
-        cims = jax.tree.map(lambda x: x, cims)
-        cims = _maybe_config(cims, u, any_cfg, val)
-        # INPUT stream: ranked scatter preserving slot order
-        mi = mu & (reg == isa.CIM_REG_INPUT)
-        rank = jnp.cumsum(mi.astype(jnp.int32)) - 1
-        pos = jnp.clip(cims["in_count"][u] + rank, 0, cim_mod.XBAR - 1)
-        row = cims["in_buf"][u].at[jnp.where(mi, pos, cim_mod.XBAR)].set(data, mode="drop")
-        cims = dict(cims)
-        cims["in_buf"] = cims["in_buf"].at[u].set(row)
-        cims["in_count"] = cims["in_count"].at[u].add(mi.sum().astype(jnp.int32))
-        # weight loading
-        mwr = mu & (reg == isa.CIM_REG_WROW)
-        cims["wrow"] = cims["wrow"].at[u].set(
-            jnp.where(mwr.any(), jnp.max(jnp.where(mwr, data, 0)), cims["wrow"][u])
-        )
-        # START: busy_until from the message's availability time
-        mst = mu & (reg == isa.CIM_REG_START)
-        t_start = jnp.maximum(t, jnp.max(jnp.where(mst, pending["t_avail"], 0)))
-        cims = _maybe_start(cims, u, mst.any(), t_start)
-        # MODE: switch dense VMM <-> spiking LIF (largest value wins within
-        # one inbox round, same resolution rule as CIM_REG_CONFIG above)
-        mmd = mu & (reg == isa.CIM_REG_MODE)
-        cims = _maybe_mode(cims, u, mmd.any(), jnp.max(jnp.where(mmd, data, 0)))
+    scratch = st["scratch"]
+    dram = st["dram"]
+    if cfg.has_cpu:
+        # --- scratch DMA writes (masked lanes scatter out-of-bounds ->
+        # dropped; NEVER write a "dead slot" with the old value: duplicate
+        # scatter indices with different values are nondeterministic in
+        # XLA).  The whole MMIO/DMA block is statically dead on a CPU-free
+        # platform (VPConfig.has_cpu): every one of these kinds originates
+        # from a CPU store or a CIM OP a CPU started, so only MSG_SPIKE can
+        # ever circulate — stray other kinds drain without effect below. ---
+        ms = m & (kind == ch.MSG_W_SCRATCH)
+        sc_idx = jnp.clip(addr, 0, SCRATCH_WORDS - 1)
+        scratch = st["scratch"].at[jnp.where(ms, sc_idx, SCRATCH_WORDS)].set(data, mode="drop")
+
+        # --- DRAM posted writes ---
+        md = m & (kind == ch.MSG_W_DRAM) & st["dram_present"]
+        d_idx = jnp.clip(addr, 0, DRAM_BACKING - 1)
+        dram = dict(st["dram"])
+        dram["data"] = dram["data"].at[jnp.where(md, d_idx, DRAM_BACKING)].set(data, mode="drop")
+        dram["writes"] = dram["writes"] + md.sum().astype(jnp.int32)
+
+        # --- CIM register writes (ordered) ---
+        slot = addr >> 16
+        reg = addr & 0xFFFF
+        mc = m & (kind == ch.MSG_W_CIM)
+        # CONFIG: last write wins per slot
+        for u in range(cfg.n_cim_slots):
+            mu = mc & (slot == u)
+            mcfg = mu & (reg == isa.CIM_REG_CONFIG)
+            any_cfg = mcfg.any()
+            val = jnp.max(jnp.where(mcfg, data, -(2**31) + 1))
+            cims = jax.tree.map(lambda x: x, cims)
+            cims = _maybe_config(cims, u, any_cfg, val)
+            # INPUT stream: ranked scatter preserving slot order
+            mi = mu & (reg == isa.CIM_REG_INPUT)
+            rank = jnp.cumsum(mi.astype(jnp.int32)) - 1
+            pos = jnp.clip(cims["in_count"][u] + rank, 0, cim_mod.XBAR - 1)
+            row = cims["in_buf"][u].at[jnp.where(mi, pos, cim_mod.XBAR)].set(data, mode="drop")
+            cims = dict(cims)
+            cims["in_buf"] = cims["in_buf"].at[u].set(row)
+            cims["in_count"] = cims["in_count"].at[u].add(mi.sum().astype(jnp.int32))
+            # weight loading
+            mwr = mu & (reg == isa.CIM_REG_WROW)
+            cims["wrow"] = cims["wrow"].at[u].set(
+                jnp.where(mwr.any(), jnp.max(jnp.where(mwr, data, 0)), cims["wrow"][u])
+            )
+            # START: busy_until from the message's availability time
+            mst = mu & (reg == isa.CIM_REG_START)
+            t_start = jnp.maximum(t, jnp.max(jnp.where(mst, pending["t_avail"], 0)))
+            cims = _maybe_start(cims, u, mst.any(), t_start)
+            # MODE: switch dense VMM <-> spiking LIF (largest value wins within
+            # one inbox round, same resolution rule as CIM_REG_CONFIG above)
+            mmd = mu & (reg == isa.CIM_REG_MODE)
+            cims = _maybe_mode(cims, u, mmd.any(), jnp.max(jnp.where(mmd, data, 0)))
 
     # --- AER spikes: accumulate into each spike-mode unit's tick buffer ---
     spk_applied = jnp.zeros_like(m)
@@ -168,22 +190,26 @@ def _apply_inbox(cfg: VPConfig, st, pending):
         # dropped like real AER fabrics drop events addressed to
         # unconfigured cores; left pending they would wedge termination.
         # Out-of-range axons drop via the scatter, the event still consumes.
-        spk_applied = spk_applied | (spk & (slot_s >= cfg.n_cim_slots))
-        for u in range(cfg.n_cim_slots):
-            eligible = (cims["tick_period"][u] > 0) & (
-                cims["mode"][u] == isa.CIM_MODE_SPIKE
-            )
-            msu = spk & (slot_s == u) & (pending["t_avail"] <= cims["next_tick"][u]) & eligible
-            # only drop once the event has actually arrived in local time:
-            # a future spike racing a runtime eligibility change must wait
-            # for the reconfiguration to apply, not vanish early
-            mdrop = spk & (slot_s == u) & ~eligible & (pending["t_avail"] <= t)
-            row = cims["in_buf"][u].at[
-                jnp.where(msu & (axon < cim_mod.XBAR), axon, cim_mod.XBAR)
-            ].add(jnp.where(msu, data, 0), mode="drop")
-            cims = dict(cims)
-            cims["in_buf"] = cims["in_buf"].at[u].set(row)
-            spk_applied = spk_applied | msu | mdrop
+        # One fused scatter-add over a flattened (slot, axon) index handles
+        # every slot at once (integer add is order-independent, so this is
+        # bit-identical to the old per-slot loop and n_cim_slots× cheaper).
+        in_range = spk & (slot_s >= 0) & (slot_s < cfg.n_cim_slots)
+        su = jnp.clip(slot_s, 0, cfg.n_cim_slots - 1)
+        eligible = in_range & (cims["tick_period"][su] > 0) & (
+            cims["mode"][su] == isa.CIM_MODE_SPIKE
+        )
+        msu = eligible & (pending["t_avail"] <= cims["next_tick"][su])
+        # only drop once the event has actually arrived in local time:
+        # a future spike racing a runtime eligibility change must wait
+        # for the reconfiguration to apply, not vanish early
+        mdrop = in_range & ~eligible & (pending["t_avail"] <= t)
+        dead = cfg.n_cim_slots * cim_mod.XBAR
+        tgt = jnp.where(msu & (axon < cim_mod.XBAR), su * cim_mod.XBAR + axon, dead)
+        cims = dict(cims)
+        cims["in_buf"] = cims["in_buf"].reshape(-1).at[tgt].add(
+            jnp.where(msu, data, 0), mode="drop"
+        ).reshape(cfg.n_cim_slots, cim_mod.XBAR)
+        spk_applied = (spk & ~in_range) | msu | mdrop
 
     st = dict(st)
     st["scratch"] = scratch
@@ -194,22 +220,26 @@ def _apply_inbox(cfg: VPConfig, st, pending):
         (m | spk_applied).astype(jnp.int32)
     )
 
-    # --- blocking DRAM read requests: service now, respond via outbox ---
-    responses = {"mask": m & (kind == ch.MSG_R_DRAM) & st["dram_present"],
-                 "addr": d_idx, "tag": data,
-                 "data": st["dram"]["data"][d_idx],
-                 "t_req": pending["t_avail"]}
+    if cfg.has_cpu:
+        # --- blocking DRAM read requests: service now, respond via outbox ---
+        responses = {"mask": m & (kind == ch.MSG_R_DRAM) & st["dram_present"],
+                     "addr": d_idx, "tag": data,
+                     "data": st["dram"]["data"][d_idx],
+                     "t_req": pending["t_avail"]}
 
-    # --- read responses: deliver to the waiting CPU (tag = rd register) ---
-    mr = m & (kind == ch.MSG_R_RESP)
-    has_resp = mr.any()
-    resp_val = jnp.max(jnp.where(mr, data, 0))
-    resp_rd = jnp.max(jnp.where(mr, addr, 0))
-    cpu = st["cpu"]
-    cpu = riscv.writeback(cpu, jnp.where(has_resp, resp_rd, 0), resp_val)
-    cpu = dict(cpu)
-    cpu["waiting"] = cpu["waiting"] & ~has_resp
-    st["cpu"] = cpu
+        # --- read responses: deliver to the waiting CPU (tag = rd register) ---
+        mr = m & (kind == ch.MSG_R_RESP)
+        has_resp = mr.any()
+        resp_val = jnp.max(jnp.where(mr, data, 0))
+        resp_rd = jnp.max(jnp.where(mr, addr, 0))
+        cpu = st["cpu"]
+        cpu = riscv.writeback(cpu, jnp.where(has_resp, resp_rd, 0), resp_val)
+        cpu = dict(cpu)
+        cpu["waiting"] = cpu["waiting"] & ~has_resp
+        st["cpu"] = cpu
+    else:
+        responses = None  # no CPU ever issues MSG_R_DRAM; step skips service
+        has_resp = jnp.array(False)
 
     pending = dict(pending)
     pending["valid"] = pending["valid"] & ~m & ~spk_applied
@@ -233,9 +263,6 @@ def _maybe_start(cims, u, pred, t_start):
 
 # ---------------------------------------------------------------------------
 # instruction slots
-
-
-STORE_LOG = 2048  # max local-DRAM stores per quantum
 
 
 def _mem_access(cfg: VPConfig, hot, dram_data, outbox, mem):
@@ -292,7 +319,7 @@ def _mem_access(cfg: VPConfig, hot, dram_data, outbox, mem):
         jnp.where(local_sc, s_idx, SCRATCH_WORDS)
     ].set(mem["st_data"], mode="drop")
     log = dict(hot["store_log"])
-    li = jnp.where(local_dram_w, jnp.clip(log["count"], 0, STORE_LOG - 1), STORE_LOG)
+    li = jnp.where(local_dram_w, jnp.clip(log["count"], 0, cfg.store_log - 1), cfg.store_log)
     log["addr"] = log["addr"].at[li].set(widx, mode="drop")
     log["data"] = log["data"].at[li].set(mem["st_data"], mode="drop")
     log["count"] = log["count"] + local_dram_w.astype(jnp.int32)
@@ -328,21 +355,22 @@ def make_segment_step(cfg: VPConfig, quantum: int):
     def step(st, pending, t_limit):
         t_inbox = st["time"]  # the SNN tick gate: time the inbox was applied at
         st, pending, responses, _ = _apply_inbox(cfg, st, pending)
-        outbox = ch.empty_box(OUT_CAP)
+        outbox = ch.empty_box(cfg.out_cap)
 
-        # service queued DRAM read requests -> responses
-        r = responses
-        outbox = ch.box_append_bulk(
-            outbox, r["mask"], ch.MSG_R_RESP,
-            r["tag"] >> 8,          # requester segment travels in the tag
-            r["tag"] & 0xFF,        # rd register index
-            r["data"],
-            jnp.maximum(st["time"], r["t_req"]) + t.dram_access,
-        )
+        if cfg.has_cpu:
+            # service queued DRAM read requests -> responses
+            r = responses
+            outbox = ch.box_append_bulk(
+                outbox, r["mask"], ch.MSG_R_RESP,
+                r["tag"] >> 8,          # requester segment travels in the tag
+                r["tag"] & 0xFF,        # rd register index
+                r["data"],
+                jnp.maximum(st["time"], r["t_req"]) + t.dram_access,
+            )
 
         dram_data = st["dram"]["data"]
         prog = st["prog"]
-        hot = {
+        hot = None if not cfg.has_cpu else {
             "time": st["time"],
             "seg_id": st["seg_id"],
             "dram_present": st["dram_present"],
@@ -353,8 +381,8 @@ def make_segment_step(cfg: VPConfig, quantum: int):
             "scratch": st["scratch"],
             "stats": st["stats"],
             "store_log": {
-                "addr": jnp.zeros((STORE_LOG,), jnp.int32),
-                "data": jnp.zeros((STORE_LOG,), jnp.int32),
+                "addr": jnp.zeros((cfg.store_log,), jnp.int32),
+                "data": jnp.zeros((cfg.store_log,), jnp.int32),
                 "count": jnp.zeros((), jnp.int32),
             },
         }
@@ -387,45 +415,52 @@ def make_segment_step(cfg: VPConfig, quantum: int):
             hot["stats"]["instrs"] = hot["stats"]["instrs"] + runnable.astype(jnp.int32)
             return (hot, outbox), None
 
-        (hot, outbox), _ = jax.lax.scan(slot, (hot, outbox), None, length=quantum)
+        if cfg.has_cpu:
+            (hot, outbox), _ = jax.lax.scan(slot, (hot, outbox), None, length=quantum)
 
-        # apply the DRAM store log in order (sequential: duplicate-safe)
-        def apply_store(data, i):
-            valid = i < hot["store_log"]["count"]
-            a = jnp.where(valid, hot["store_log"]["addr"][i], DRAM_BACKING - 1)
-            return data.at[a].set(jnp.where(valid, hot["store_log"]["data"][i], data[a])), None
+            # apply the DRAM store log in order (sequential: duplicate-safe)
+            def apply_store(data, i):
+                valid = i < hot["store_log"]["count"]
+                a = jnp.where(valid, hot["store_log"]["addr"][i], DRAM_BACKING - 1)
+                return data.at[a].set(jnp.where(valid, hot["store_log"]["data"][i], data[a])), None
 
-        dram_data, _ = jax.lax.scan(apply_store, dram_data, jnp.arange(STORE_LOG))
+            dram_data, _ = jax.lax.scan(apply_store, dram_data, jnp.arange(cfg.store_log))
 
-        st = dict(st)
-        st["time"] = hot["time"]
-        st["cpu"] = hot["cpu"]
-        st["icache"] = hot["icache"]
-        st["dcache"] = hot["dcache"]
-        st["scratch"] = hot["scratch"]
-        st["stats"] = hot["stats"]
-        st["dram"] = {**hot["dram_meta"], "data": dram_data}
+            st = dict(st)
+            st["time"] = hot["time"]
+            st["cpu"] = hot["cpu"]
+            st["icache"] = hot["icache"]
+            st["dcache"] = hot["dcache"]
+            st["scratch"] = hot["scratch"]
+            st["stats"] = hot["stats"]
+            st["dram"] = {**hot["dram_meta"], "data": dram_data}
+        else:
+            st = dict(st)  # CPU-free: the instruction machinery is dead code
 
         # passive segments (no CPU or halted) advance to the decoupling bound
         passive = ~st["cpu"]["present"] | st["cpu"]["halted"]
         st["time"] = jnp.where(passive, jnp.maximum(st["time"], t_limit), st["time"])
 
         # --- CIM completion at the quantum boundary ---
-        cims, done = cim_mod.finish_ops(st["cims"], st["time"], cfg.use_kernel)
-        st["cims"] = cims
-        for u in range(cfg.n_cim_slots):
-            du = done[u]
-            rows = jnp.arange(cim_mod.XBAR)
-            mask_rows = du & (rows < cims["rows"][u])
-            outbox = ch.box_append_bulk(
-                outbox, mask_rows, ch.MSG_W_SCRATCH, cims["mgr_seg"][u],
-                cims["out_addr"][u] + rows, cims["out_buf"][u],
-                jnp.maximum(cims["busy_until"][u], 0),
-            )
-            outbox = ch.box_append(
-                outbox, du, ch.MSG_W_SCRATCH, cims["mgr_seg"][u],
-                cims["flag_addr"][u], jnp.ones((), jnp.int32), cims["busy_until"][u],
-            )
+        # statically dead on a CPU-free platform: a dense OP only enters
+        # state 2 via an MMIO START, which only a CPU can issue (the builder
+        # keeps has_cpu True if cim_init presets an in-flight OP)
+        if cfg.has_cpu:
+            cims, done = cim_mod.finish_ops(st["cims"], st["time"], cfg.use_kernel)
+            st["cims"] = cims
+            for u in range(cfg.n_cim_slots):
+                du = done[u]
+                rows = jnp.arange(cim_mod.XBAR)
+                mask_rows = du & (rows < cims["rows"][u])
+                outbox = ch.box_append_bulk(
+                    outbox, mask_rows, ch.MSG_W_SCRATCH, cims["mgr_seg"][u],
+                    cims["out_addr"][u] + rows, cims["out_buf"][u],
+                    jnp.maximum(cims["busy_until"][u], 0),
+                )
+                outbox = ch.box_append(
+                    outbox, du, ch.MSG_W_SCRATCH, cims["mgr_seg"][u],
+                    cims["flag_addr"][u], jnp.ones((), jnp.int32), cims["busy_until"][u],
+                )
 
         # --- SNN tick at the quantum boundary: LIF integration + AER out ---
         if cfg.has_snn:
@@ -455,11 +490,55 @@ def make_segment_step(cfg: VPConfig, quantum: int):
                     )
         st["stats"] = dict(st["stats"])
         st["stats"]["msgs"] = st["stats"]["msgs"] + outbox["count"]
-        # sticky watermark: box_append* clips past-capacity appends onto the
-        # last slot, so a peak beyond OUT_CAP means emitted messages (e.g. a
-        # wide SNN tick's AER burst) were silently lost — checked loudly by
-        # the controller alongside the inbox watermark
+        # sticky watermark: past-capacity appends are silently lost (bulk
+        # appends truncate, single appends clip onto the last slot), so a
+        # peak beyond out_cap means emitted messages (e.g. a wide SNN tick's
+        # AER burst) were dropped — checked loudly by the controller
+        # alongside the inbox watermark
         st["stats"]["outbox_peak"] = jnp.maximum(st["stats"]["outbox_peak"], outbox["count"])
         return st, outbox, pending
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# termination / overflow reducer
+
+
+def termination_flags(states, pending, in_cap: int, out_cap: int):
+    """Traced ``(done, inbox_over, outbox_over)`` over the stacked simulation.
+
+    This is the controller's termination predicate and overflow watermark
+    check as *traced* code, so it runs both host-side (one fused device
+    sync instead of four separate ``bool(jnp.any(...))`` round-trips) and
+    inside the device-resident megaloop's ``lax.while_loop`` (no host
+    round-trip at all).  Semantics mirror the original host-side checks:
+
+    - ``done``: no present-and-running CPU, no CIM unit with an in-flight
+      OP (merely armed units are not forward progress), no spike-mode unit
+      that will still change observable state at its next tick
+      (accumulated-but-unintegrated spikes, or an active neuron already at
+      threshold — possible when a runtime CIM_REG_MODE write lowers thresh
+      under a charged membrane; units that never tick can never drain and
+      are not busy), and no valid pending message.  With an empty buffer
+      and everyone subthreshold, leak alone can never cross threshold
+      (leak >= 0, reset-to-zero), so idling is final.
+    - ``inbox_over`` / ``outbox_over``: the sticky high-water marks carried
+      in the state ever exceeded IN_CAP / OUT_CAP (see
+      ``channel.inbox_overflowed``); the controller raises host-side.
+    """
+    from repro.vp import isa
+
+    cpus = states["cpu"]
+    active_cpu = jnp.any(cpus["present"] & ~cpus["halted"])
+    cims = states["cims"]
+    busy_cim = jnp.any(cims["state"] == 2)
+    ticking = (cims["mode"] == isa.CIM_MODE_SPIKE) & (cims["tick_period"] > 0)
+    pending_in = (cims["in_buf"] != 0).any(-1)
+    due = ((cims["v"] >= cims["thresh"][..., None]) & (cims["refrac"] == 0)).any(-1)
+    busy_snn = jnp.any(ticking & (pending_in | due))
+    msgs = jnp.any(pending["valid"])
+    done = ~(active_cpu | busy_cim | busy_snn | msgs)
+    inbox_over = ch.inbox_overflowed(pending, in_cap)
+    outbox_over = (states["stats"]["outbox_peak"] > out_cap).any()
+    return done, inbox_over, outbox_over

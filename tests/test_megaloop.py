@@ -1,0 +1,166 @@
+"""The device-resident megaloop is pure mechanism: fusing exec+sync rounds
+into one jitted ``lax.while_loop`` with on-device termination must be
+bit-identical to per-round dispatch — same final states, same pending
+boxes, same round counts, same overflow errors — for every backend ×
+quantum × check cadence × dispatch granularity (ISSUE 3 / docs/architecture.md
+"The device-resident megaloop").
+
+Deterministic parametrized coverage always runs; a randomized hypothesis
+property sweep rides on top when the 'test' extra is installed.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import segmentation as sg
+from repro.core.controller import Controller
+from repro.vp import platform as pf
+from repro.vp import workloads as wl
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+LAYER = wl.Layer("mega", "t", 8, 8, 4)
+
+
+def build_cim(channel_latency=2000):
+    descs = sg.uniform(2, 2)
+    job = wl.cim_workload(LAYER, mgr_segments=[0, 1],
+                          cim_ids_per_mgr={0: (0, 1), 1: (2, 3)})
+    return sg.build(descs, programs=job["programs"], dram_words=job["dram"],
+                    crossbars=job["crossbars"], scratch_init=job["scratch"],
+                    channel_latency=channel_latency)
+
+
+def build_snn():
+    from repro import snn
+
+    job = snn.snn_inference_job((16, 12, 8), t_steps=6, rate=0.6, seed=5)
+    descs = snn.segmentation_for(2, "uniform", n_segments=2)
+    cfg, states, pending, _meta = snn.build_snn(job.layers, descs, job.raster)
+    return cfg, states, pending
+
+
+def final(sim, backend, quantum, check_every, max_rounds=300, **kw):
+    cfg, states, pending = sim
+    ctl = Controller(cfg, states, pending, backend=backend, quantum=quantum)
+    rounds, _ = ctl.run(max_rounds=max_rounds, check_every=check_every, **kw)
+    return rounds, ctl.result_states(), ctl._pending_stacked()
+
+
+def assert_identical(a, b):
+    ra, sta, pea = a
+    rb, stb, peb = b
+    assert ra == rb, f"round counts differ: {ra} vs {rb}"
+    for x, y in zip(jax.tree.leaves(sta), jax.tree.leaves(stb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(pea), jax.tree.leaves(peb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def cim_sim():
+    return build_cim()
+
+
+@pytest.fixture(scope="module")
+def snn_sim():
+    return build_snn()
+
+
+@pytest.mark.parametrize("quantum,check_every,k", [
+    (1000, 1, 1), (1000, 2, 3), (1000, 3, 64), (500, 4, 2), (2000, 1, 256),
+])
+def test_megaloop_bit_identical_cim(cim_sim, quantum, check_every, k):
+    ref = final(cim_sim, "vmap", quantum, check_every, fused=False)
+    got = final(cim_sim, "vmap", quantum, check_every, fused=True,
+                rounds_per_dispatch=k)
+    assert_identical(got, ref)
+
+
+@pytest.mark.parametrize("backend", ["sequential", "threads"])
+def test_megaloop_matches_host_loop_backends(cim_sim, backend):
+    """The megaloop agrees with the honest host-looped baselines too."""
+    ref = final(cim_sim, backend, 1000, 2)
+    got = final(cim_sim, "vmap", 1000, 2, fused=True, rounds_per_dispatch=32)
+    assert_identical(got, ref)
+
+
+@pytest.mark.parametrize("check_every,k", [(1, 1), (2, 7), (3, 64)])
+def test_megaloop_bit_identical_snn(snn_sim, check_every, k):
+    ref = final(snn_sim, "vmap", 32, check_every, fused=False)
+    got = final(snn_sim, "vmap", 32, check_every, fused=True,
+                rounds_per_dispatch=k)
+    assert_identical(got, ref)
+
+
+def test_megaloop_early_termination(cim_sim):
+    """A workload that finishes long before max_rounds must stop at the same
+    check round fused and unfused, well short of the dispatch budget."""
+    r_ref, _, _ = final(cim_sim, "vmap", 1000, 2, max_rounds=500, fused=False)
+    r_got, _, _ = final(cim_sim, "vmap", 1000, 2, max_rounds=500, fused=True,
+                        rounds_per_dispatch=500)
+    assert r_got == r_ref < 500
+
+
+def test_capacity_invariance_snn():
+    """Right-sized channel caps are bit-identical to the generous defaults
+    (the sticky watermarks police overflow, so small caps are safe), fused
+    and unfused."""
+    from repro import snn
+
+    job = snn.snn_inference_job((16, 12, 8), t_steps=6, rate=0.6, seed=5)
+    descs = snn.segmentation_for(2, "uniform", n_segments=2)
+    runs = {}
+    for name, caps in (("default", {}), ("small", dict(in_cap=256, out_cap=128))):
+        cfg, states, pending, _ = snn.build_snn(job.layers, descs, job.raster, **caps)
+        for fused in (False, True):
+            ctl = Controller(cfg, states, pending, backend="vmap", quantum=32)
+            rounds, _ = ctl.run(max_rounds=300, check_every=2, fused=fused)
+            runs[(name, fused)] = (rounds, ctl.result_states())
+    ref_rounds, ref_st = runs[("default", False)]
+    for key, (rounds, st) in runs.items():
+        assert rounds == ref_rounds, key
+        for x, y in zip(jax.tree.leaves(ref_st), jax.tree.leaves(st)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_megaloop_inbox_overflow_same_error(monkeypatch):
+    """The on-device sticky watermark still surfaces as the same loud
+    RuntimeError: shrink IN_CAP so the workload's MMIO burst overflows the
+    pending box, and require fused and per-round execution to raise the
+    identical message (same stop round -> same watermark list)."""
+    monkeypatch.setattr(pf, "IN_CAP", 4)
+    sim = build_cim(channel_latency=1999)  # unique fn-cache key for the patch
+
+    msgs = {}
+    for name, kw in (("per_round", dict(fused=False)),
+                     ("mega", dict(fused=True, rounds_per_dispatch=64))):
+        with pytest.raises(RuntimeError, match="overflow") as ei:
+            final(sim, "vmap", 1999, 2, **kw)
+        msgs[name] = str(ei.value)
+    assert msgs["mega"] == msgs["per_round"]
+    assert "pending inbox overflow" in msgs["mega"]
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        quantum=st.sampled_from([500, 1000, 2000]),
+        check_every=st.integers(min_value=1, max_value=5),
+        k=st.sampled_from([1, 2, 3, 7, 64, 500]),
+        backend=st.sampled_from(["vmap", "sequential"]),
+    )
+    def test_megaloop_property(quantum, check_every, k, backend):
+        """Random (quantum, cadence, dispatch granularity, reference backend):
+        megaloop execution is always bit-identical to per-round execution."""
+        sim = build_cim()
+        ref = final(sim, backend, quantum, check_every, fused=False)
+        got = final(sim, "vmap", quantum, check_every, fused=True,
+                    rounds_per_dispatch=k)
+        assert_identical(got, ref)
