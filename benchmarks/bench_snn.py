@@ -7,6 +7,14 @@ host time, simulated spikes per host-second, and the sq/pll speedup.
 Spike totals are asserted identical across backends (bit-exact property)
 and against the pure-jnp oracle — a speedup on wrong spikes is worthless.
 
+The *recurrent* scenario opens the cyclic workload class (TrueNorth/RANC
+cores are dominated by recurrent wiring): an Elman-style self-recurrent
+hidden layer, a winner-take-all self-inhibiting output pool, and a
+backward feedback edge run over a bounded tick horizon, verified
+bit-exactly against the cycle-aware oracle — spikes/sec per segmentation
+strategy shows how placement copes when every hot layer also talks to
+itself and to earlier layers.
+
 The *wide* scenario exercises multi-crossbar layers: a 600-neuron hidden
 layer shards into three row stripes, and its 600-axon consumer tiles into
 a co-located column group.  Naive (chain-order uniform) placement is
@@ -71,6 +79,53 @@ def run(strategies=("uniform", "load_oriented", "auto"), sizes=SIZES,
             "sq_spikes_per_s": spikes / t_sq, "pll_spikes_per_s": spikes / t_pll,
             "rounds": ctl_pll.rounds_run,
             "pll_rounds_per_s": ctl_pll.rounds_run / t_pll,
+            "correct": ok,
+        })
+    return rows
+
+
+REC_SIZES = (96, 80, 24)  # Elman hidden + WTA output + feedback edge
+REC_T_STEPS = 16
+
+
+def run_recurrent(strategies=("uniform", "load_oriented", "auto"),
+                  sizes=REC_SIZES, t_steps=REC_T_STEPS, seed=3):
+    """Recurrent/lateral connectivity per segmentation strategy.
+
+    The cyclic analogue of ``run``: a ``snn_recurrent_job`` network (the
+    hidden layer feeds itself laterally, the output pool self-inhibits,
+    and a backward edge closes the loop) runs over its bounded tick
+    horizon on the sq and pll backends.  Cyclic edges triple the AER
+    fan-out of the hot layers, so this scenario stresses exactly the
+    cross-segment traffic the placement strategies trade in; spike totals
+    are verified across backends and against the cycle-aware oracle.
+    """
+    job = snn.snn_recurrent_job(sizes, t_steps=t_steps, rate=0.5, seed=seed)
+    rows = []
+    for strategy in strategies:
+        placement = None
+        if strategy == "auto":
+            descs, placement = snn.auto_segmentation_for(
+                job.layers, n_segments=4, edges=job.edges)
+        else:
+            descs = snn.segmentation_for(job.layers, strategy, n_segments=4,
+                                         edges=job.edges)
+        cfg, states, pending, meta = snn.build_snn(
+            job.layers, descs, job.raster, edges=job.edges,
+            n_ticks=job.n_ticks, placement=placement)
+        t_sq, ctl_sq = _timed(cfg, states, pending, "sequential")
+        t_pll, ctl_pll = _timed(cfg, states, pending, "vmap")
+        spikes = snn.total_spikes(ctl_pll.result_states())
+        assert spikes == snn.total_spikes(ctl_sq.result_states()), \
+            "backends disagree on spike totals"
+        counts = snn.output_spike_counts(ctl_pll.result_states(), meta)
+        ok = bool(np.array_equal(counts, job.expected_counts))
+        ok &= spikes == job.expected_total
+        rows.append({
+            "strategy": strategy, "segments": len(descs),
+            "n_ticks": job.n_ticks, "spikes": spikes,
+            "sq_s": t_sq, "pll_s": t_pll, "speedup": t_sq / t_pll,
+            "sq_spikes_per_s": spikes / t_sq, "pll_spikes_per_s": spikes / t_pll,
             "correct": ok,
         })
     return rows
@@ -170,6 +225,14 @@ def main(out=print):
             f" sq_spk_per_s={r['sq_spikes_per_s']:.0f}"
             f" pll_spk_per_s={r['pll_spikes_per_s']:.0f}"
             f" pll_rounds_per_s={r['pll_rounds_per_s']:.0f}"
+            f" segments={r['segments']} ok={r['correct']}")
+    rec_net = "x".join(str(s) for s in REC_SIZES)
+    for r in run_recurrent():
+        out(f"fig5snn/recurrent/{r['strategy']}/{rec_net},{r['sq_s']*1e6:.0f},"
+            f"sq_vs_pll_speedup={r['speedup']:.2f}x"
+            f" spikes={r['spikes']} n_ticks={r['n_ticks']}"
+            f" sq_spk_per_s={r['sq_spikes_per_s']:.0f}"
+            f" pll_spk_per_s={r['pll_spikes_per_s']:.0f}"
             f" segments={r['segments']} ok={r['correct']}")
     m = run_megaloop()
     mega_net = "x".join(str(s) for s in MEGA_SIZES)

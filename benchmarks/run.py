@@ -41,8 +41,9 @@ def sections():
          bench_vmm_workloads.main),
         ("segmentation", "Fig. 4c/4d — segmentation speedups (sq vs pll)",
          bench_segmentation.main),
-        ("snn", "SNN — spiking inference, spikes/sec per segmentation + "
-         "wide-layer naive vs traffic-aware placement", bench_snn.main),
+        ("snn", "SNN — spiking inference, spikes/sec per segmentation "
+         "(feed-forward + recurrent/lateral) + wide-layer naive vs "
+         "traffic-aware placement", bench_snn.main),
         ("quantum_sweep", "§V-C — quantum-size sweep", bench_quantum_sweep.main),
         ("roofline", "§Roofline — dry-run derived terms (40 cells)",
          bench_roofline.main),

@@ -149,9 +149,9 @@ class Controller:
                     at_check = ((r0 + i) % check_every) == 0
 
                     def checked(_):
-                        done, in_over, out_over = pf.termination_flags(
-                            st, pen, cfg.in_cap, cfg.out_cap)
-                        over = in_over | out_over
+                        done, in_over, out_over, st_over = pf.termination_flags(
+                            st, pen, cfg.in_cap, cfg.out_cap, cfg.store_log)
+                        over = in_over | out_over | st_over
                         return done & ~over, over
 
                     # cond, not where: non-check rounds skip the reductions
@@ -174,7 +174,7 @@ class Controller:
                 "vmap_mega": jax.jit(megaloop(vmap_round), donate_argnums=(0, 1)),
                 "flags": jax.jit(
                     lambda states, pending: jnp.stack(pf.termination_flags(
-                        states, pending, cfg.in_cap, cfg.out_cap))
+                        states, pending, cfg.in_cap, cfg.out_cap, cfg.store_log))
                 ),
                 "step_one": jax.jit(step),
                 "limits": jax.jit(limits),
@@ -243,7 +243,16 @@ class Controller:
             self._shard_mega = jax.jit(megaloop(shard_round), donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------
+    def _require_open(self):
+        if getattr(self, "_closed", False):
+            raise RuntimeError(
+                "Controller is closed: close() released its host resources "
+                "(the threads backend's worker pool); build a new Controller "
+                "to run again"
+            )
+
     def round(self):
+        self._require_open()
         s = self.cfg.n_segments
         if self.backend == "vmap":
             self.states, self.pending = self._vmap_round(self.states, self.pending)
@@ -304,6 +313,13 @@ class Controller:
                 f"outbox overflow (peak {out_peak.tolist()} > {self.cfg.out_cap}); "
                 "raise out_cap (builder kwarg) or thin the workload's traffic"
             )
+        store_peak = np.asarray(states["stats"]["store_peak"])
+        if (store_peak > self.cfg.store_log).any():
+            raise RuntimeError(
+                f"DRAM store-log overflow (peak {store_peak.tolist()} > "
+                f"{self.cfg.store_log} stores in one quantum); raise store_log "
+                "(builder kwarg) or shrink the quantum"
+            )
 
     def done(self) -> bool:
         """Termination check + loud overflow validation (one device sync).
@@ -312,13 +328,14 @@ class Controller:
         (``platform.termination_flags`` — see its docstring for the exact
         semantics: running CPUs, in-flight CIM OPs, drainable spike-mode
         work, pending messages); here it is evaluated as one fused jitted
-        call returning a single (3,) bool array, instead of four separate
-        ``bool(jnp.any(...))`` host round-trips.
+        call returning a single (4,) bool array — done + the inbox/outbox/
+        store-log watermarks — instead of separate ``bool(jnp.any(...))``
+        host round-trips.
         """
-        d, in_over, out_over = np.asarray(
+        d, in_over, out_over, store_over = np.asarray(
             self._flags_fn(self._stacked(), self._pending_stacked())
         )
-        if in_over or out_over:
+        if in_over or out_over or store_over:
             self._check_overflow()  # raises with the detailed watermark message
         return bool(d)
 
@@ -334,10 +351,15 @@ class Controller:
         return self
 
     def close(self):
-        """Release host resources (the threads backend's persistent pool)."""
+        """Release host resources (the threads backend's persistent pool).
+
+        Idempotent; a closed controller refuses to ``run``/``round`` with a
+        clear error instead of dying inside the round machinery.  Reading
+        results (``result_states``/``stats``/``done``) stays valid."""
         if getattr(self, "_pool", None) is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+        self._closed = True
 
     def __del__(self):
         try:
@@ -360,6 +382,7 @@ class Controller:
         baselines; see docs/architecture.md) with the fused done-reducer.
         """
         t0 = _time.perf_counter()
+        self._require_open()
         if rounds_per_dispatch < 1:
             raise ValueError("rounds_per_dispatch must be >= 1")
         if fused is None:

@@ -98,7 +98,13 @@ def traffic_partition(widths, loads, traffic, n_segments: int,
              ``width`` co-located slots — it is atomic)
     loads:   per-group compute cost (synaptic ops/tick), the tie-breaker
     traffic: (G, G) measured spike rates — traffic[i, j] events/tick from
-             group i to group j (profiling pass, snn/topology.py)
+             group i to group j (profiling pass, snn/topology.py).  Cyclic
+             nets make the matrix asymmetric (backward projections) and
+             give it a nonzero diagonal (a stripe's lateral spikes to
+             itself); the diagonal is placement-invariant self-traffic and
+             is excluded from the cut up front, so lateral-heavy groups
+             are neither attracted to nor repelled from any segment by
+             their own chatter.
 
     Minimizes the cross-segment traffic cut under per-segment slot budgets:
     groups are seeded greedily in descending traffic-degree order, each
@@ -116,6 +122,7 @@ def traffic_partition(widths, loads, traffic, n_segments: int,
     traffic = np.asarray(traffic, float)
     g = len(widths)
     assert traffic.shape == (g, g) and len(loads) == g
+    traffic = traffic - np.diag(np.diag(traffic))  # self-traffic never cut
     assert widths.max(initial=0) <= slots_per_seg, \
         "a column group is atomic: raise slots_per_seg to its width"
     assert n_segments * slots_per_seg >= widths.sum(), "not enough slots"

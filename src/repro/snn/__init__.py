@@ -7,23 +7,32 @@ Module map:
                  kernel in kernels/lif_step/ and the spike-mode CIM unit)
   topology.py  — SNN-to-VP mapping: layers tiled onto spike-mode crossbars
                  (wide layers shard into row stripes + co-located column
-                 groups), inter-layer AER wiring, placement strategies
-                 (uniform / load_oriented / auto / traffic-aware auto),
+                 groups), AER wiring for the full connectivity graph
+                 (feed-forward chain + lateral synapses + backward
+                 RecurrentEdge projections, each in-edge its own column
+                 range), placement strategies (uniform / load_oriented /
+                 auto / traffic-aware auto, cyclic edges costed),
                  spike-rate profiling, input-raster injection, readback
-  workloads.py — rate-coded inference jobs + the pure-jnp network oracle
-                 the VP is verified bit-exactly against (oracle_rates is
-                 the profiling pass behind traffic-aware placement)
+  workloads.py — rate-coded inference jobs (feed-forward and recurrent) +
+                 the cycle-aware pure-jnp network oracle the VP is
+                 verified bit-exactly against over a shared tick horizon
+                 (oracle_rates is the profiling pass behind traffic-aware
+                 placement)
 
 Related VP pieces: core/channel.py MSG_SPIKE (tick-bucketed AER events),
 vp/isa.py CIM_REG_MODE, vp/cim.py snn_tick (quantum-boundary LIF
 integration), benchmarks/bench_snn.py (spikes/sec per segmentation).
 """
-from repro.snn.neuron import LIFParams, lif_step, pool_state
+from repro.snn.neuron import LIFParams, lif_step, lif_step_multi, pool_state
 from repro.snn.topology import (
+    RecurrentEdge,
     SNNLayer,
     StripeGroup,
     auto_segmentation_for,
     build_snn,
+    connectivity,
+    edge_dsts,
+    is_cyclic,
     layer_groups,
     measure_traffic,
     n_units_for,
@@ -36,7 +45,9 @@ from repro.snn.workloads import (
     SNNJob,
     oracle_rates,
     oracle_run,
+    random_recurrent_snn,
     random_snn,
     rate_encode,
     snn_inference_job,
+    snn_recurrent_job,
 )

@@ -53,3 +53,28 @@ def lif_step(state, weights, spikes_in, params: LIFParams):
         jnp.int32(params.refrac_period),
     )
     return {"v": v2, "refrac": refrac2}, fired
+
+
+def lif_step_multi(state, weight_blocks, spike_blocks, params: LIFParams):
+    """One tick with multi-source fan-in: per-edge synapse blocks.
+
+    ``weight_blocks``: [(R, C_e) int8, ...] — one synapse matrix per in-edge
+    (feed-forward, lateral, recurrent); ``spike_blocks``: the matching
+    [(C_e,) int32, ...] spike-count vectors.  The per-edge charges are
+    contracted independently and summed — bit-identical to one contraction
+    of the horizontally concatenated matrix, because the fan-in clip is
+    element-wise and the int32 matmul distributes over column blocks (the
+    same identity the VP's column groups rely on, kernels/lif_step/ref.py).
+    This is the single-pool primitive behind the cycle-aware network oracle
+    (snn/workloads.py): on the VP each edge occupies a disjoint axon range
+    of the destination crossbar, so summing per-edge charge here mirrors
+    the hardware's axon-space concatenation exactly.
+    """
+    assert len(weight_blocks) == len(spike_blocks) and weight_blocks
+    syn = sum(lif_ref.syn_charge(jnp.asarray(w, jnp.int8), jnp.asarray(s, jnp.int32))
+              for w, s in zip(weight_blocks, spike_blocks))
+    v2, refrac2, fired = lif_ref.lif_update(
+        syn, state["v"], state["refrac"], jnp.int32(params.thresh),
+        jnp.int32(params.leak), jnp.int32(params.refrac_period),
+    )
+    return {"v": v2, "refrac": refrac2}, fired

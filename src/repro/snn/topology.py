@@ -23,8 +23,25 @@ tick T becomes a MSG_SPIKE to each of layer l+1's stripes (the tile whose
 column slice covers axon j) with t_avail = T + channel latency, integrated
 at tick T+1 — one tick of axonal delay per hop, *independent of placement*,
 because the builder enforces ``tick_period >= channel_latency`` (the same
-inequality the paper demands of quantum vs latency).  The last layer is a
-sink: it counts its own spikes instead of emitting events.
+inequality the paper demands of quantum vs latency).  A layer with no
+out-edges is a sink: it counts its own spikes instead of emitting events.
+
+Connectivity is not restricted to the forward chain (TrueNorth/RANC cores
+are dominated by recurrent wiring): a layer may declare *lateral* synapses
+(``SNNLayer.lateral``, intra-layer, e.g. winner-take-all inhibition) and
+the network may declare backward *recurrent* projections
+(``RecurrentEdge(src, dst, weights)`` with dst <= src, e.g. Elman-style
+feedback).  Every in-edge of a layer occupies its own column range of the
+layer's crossbar — the effective fan-in is the concatenation of all source
+axon spaces (``connectivity``) — and every out-edge is just more fan-out
+table entries, so cyclic spikes ride the identical tick-bucketed AER
+machinery as forward ones: a spike emitted at tick k integrates at the
+destination's tick k+1 whether the edge points forward, sideways, or
+backward.  Because cyclic activity can self-sustain forever, cyclic nets
+must declare a tick horizon (``build_snn(n_ticks=...)``): every unit ticks
+exactly ``n_ticks`` times (``tick_limit``) and the cycle-aware oracle
+(snn/workloads.py) simulates the same bounded window, keeping VP-vs-oracle
+equality bit-exact.
 
 Placement strategies mirror the dense-VMM ones (core/segmentation.py):
 ``uniform`` spreads units across CPU segments, ``load_oriented`` packs them
@@ -52,8 +69,12 @@ from repro.snn.neuron import LIFParams
 
 @dataclasses.dataclass(frozen=True)
 class SNNLayer:
-    weights: np.ndarray  # int8 (n_out, n_in) synapse matrix
+    weights: np.ndarray  # int8 (n_out, n_in) feed-forward synapse matrix
     params: LIFParams = LIFParams()
+    # intra-layer lateral synapses, int8 (n_out, n_out): neuron j firing at
+    # tick k contributes lateral[:, j] to its own layer's charge at tick
+    # k+1 (one tick of axonal delay, like any hop).  None = none.
+    lateral: np.ndarray | None = None
 
     @property
     def n_out(self) -> int:
@@ -62,6 +83,87 @@ class SNNLayer:
     @property
     def n_in(self) -> int:
         return self.weights.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentEdge:
+    """Backward projection: layer ``src``'s spikes feed layer ``dst <= src``
+    (one tick later, like every hop).  ``weights`` is int8
+    (layers[dst].n_out, layers[src].n_out); ``dst == src`` is equivalent to
+    ``SNNLayer.lateral``.  Forward skip connections are not edges — the
+    chain already is the forward path."""
+    src: int
+    dst: int
+    weights: np.ndarray
+
+
+def connectivity(layers, edges=()):
+    """Canonical connectivity table of a (possibly cyclic) network.
+
+    Returns ``(in_edges, out_edges, eff_n_in)``:
+
+      in_edges[l]  — ordered [(src, weights, col_off), ...]: the sources
+                     whose concatenated axon spaces form layer l's crossbar
+                     columns.  ``src == -1`` is the external input raster
+                     (layer 0's feed-forward edge); ``src >= 0`` is layer
+                     src's spike output, delayed one tick.  Order: the
+                     feed-forward edge first (so external raster axons stay
+                     at offset 0), then lateral, then declared recurrent
+                     edges in declaration order.
+      out_edges[l] — [(dst, col_off), ...]: where layer l's spikes land in
+                     each destination's effective axon space.
+      eff_n_in[l]  — layer l's effective fan-in (total crossbar columns).
+
+    Both the VP builder (``build_snn``) and the cycle-aware oracle
+    (snn/workloads.py) derive their wiring from this one table, which is
+    what makes their axon spaces — and therefore the per-axon fan-in
+    saturation — line up bit-exactly.
+    """
+    n_layers = len(layers)
+    pairs = []  # (dst, src, weights) in canonical order
+    for l, layer in enumerate(layers):
+        pairs.append((l, l - 1, np.asarray(layer.weights, np.int8)))
+        if layer.lateral is not None:
+            lat = np.asarray(layer.lateral, np.int8)
+            assert lat.shape == (layer.n_out, layer.n_out), (
+                f"layer {l}: lateral must be (n_out, n_out) = "
+                f"{(layer.n_out, layer.n_out)}, got {lat.shape}")
+            pairs.append((l, l, lat))
+    for e in edges:
+        assert isinstance(e, RecurrentEdge), "edges must be RecurrentEdge"
+        assert 0 <= e.dst <= e.src < n_layers, (
+            f"recurrent edge {e.src}->{e.dst}: needs 0 <= dst <= src < "
+            f"{n_layers} (the forward path is the layer chain; recurrent "
+            "edges point backward or sideways)")
+        w = np.asarray(e.weights, np.int8)
+        want = (layers[e.dst].n_out, layers[e.src].n_out)
+        assert w.shape == want, (
+            f"recurrent edge {e.src}->{e.dst}: weights must be {want} "
+            f"(dst neurons x src neurons), got {w.shape}")
+        pairs.append((e.dst, e.src, w))
+    in_edges = [[] for _ in range(n_layers)]
+    out_edges = [[] for _ in range(n_layers)]
+    eff_n_in = [0] * n_layers
+    for dst, src, w in sorted(pairs, key=lambda p: p[0]):  # stable in dst
+        off = eff_n_in[dst]
+        in_edges[dst].append((src, w, off))
+        eff_n_in[dst] += w.shape[1]
+        if src >= 0:
+            out_edges[src].append((dst, off))
+    return in_edges, out_edges, eff_n_in
+
+
+def _cyclic(in_edges) -> bool:
+    """Cyclicity predicate over an already-computed in-edge table: any
+    in-edge pointing sideways or backward closes a cycle (the forward
+    chain's src is always l-1)."""
+    return any(src >= l for l, el in enumerate(in_edges) for src, _, _ in el)
+
+
+def is_cyclic(layers, edges=()) -> bool:
+    """True if any in-edge points sideways or backward (lateral synapses or
+    recurrent projections) — such nets need an explicit tick horizon."""
+    return _cyclic(connectivity(layers, edges)[0])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,12 +186,13 @@ class StripeGroup:
         return self.r1 - self.r0
 
 
-def layer_groups(layers) -> list:
-    """Tile every layer into stripe groups (row stripes × column tiles)."""
+def _tile(layers, eff_n_in) -> list:
+    """Stripe groups from an already-computed effective-fan-in table."""
     groups = []
     for li, l in enumerate(layers):
+        n_in = eff_n_in[li]
         col_edges = tuple(
-            (c, min(c + XBAR, l.n_in)) for c in range(0, l.n_in, XBAR)
+            (c, min(c + XBAR, n_in)) for c in range(0, n_in, XBAR)
         )
         for si, r0 in enumerate(range(0, l.n_out, XBAR)):
             groups.append(
@@ -98,9 +201,19 @@ def layer_groups(layers) -> list:
     return groups
 
 
-def n_units_for(layers) -> int:
+def layer_groups(layers, edges=()) -> list:
+    """Tile every layer into stripe groups (row stripes × column tiles).
+
+    Columns cover the layer's *effective* fan-in — the concatenated axon
+    spaces of every in-edge (feed-forward, lateral, recurrent): a heavily
+    recurrent layer tiles wider than its feed-forward shape suggests.
+    """
+    return _tile(layers, connectivity(layers, edges)[2])
+
+
+def n_units_for(layers, edges=()) -> int:
     """Total CIM units (crossbar tiles) the network occupies."""
-    return sum(g.width for g in layer_groups(layers))
+    return sum(g.width for g in layer_groups(layers, edges))
 
 
 def _chunk_widths(widths, n_chunks):
@@ -119,17 +232,21 @@ def _chunk_widths(widths, n_chunks):
     return caps
 
 
-def segmentation_for(layers_or_n, strategy: str, n_segments: int = 4):
+def segmentation_for(layers_or_n, strategy: str, n_segments: int = 4,
+                     edges=()):
     """Segment descriptors with enough CIM slots for the network.
 
     ``layers_or_n``: the [SNNLayer, ...] chain (slot capacities follow its
     tiling, keeping every multi-crossbar column group placeable) or, for
-    narrow single-unit layers, just the layer count.
+    narrow single-unit layers, just the layer count.  ``edges``: recurrent
+    projections (they widen effective fan-ins, hence the tiling).
     """
     if isinstance(layers_or_n, int):
+        assert not edges, \
+            "edges need the layer chain to size tiling: pass the layers"
         widths = [1] * layers_or_n
     else:
-        widths = [g.width for g in layer_groups(layers_or_n)]
+        widths = [g.width for g in layer_groups(layers_or_n, edges)]
     n_units = sum(widths)
     if strategy == "uniform":
         if isinstance(layers_or_n, int):  # historical equal split
@@ -155,7 +272,7 @@ def segmentation_for(layers_or_n, strategy: str, n_segments: int = 4):
 
 
 def auto_segmentation_for(layers, n_segments: int = 4, slots_per_seg: int = 2,
-                          traffic=None):
+                          traffic=None, edges=()):
     """Cost- or traffic-aware placement of shard groups onto segments.
 
     Without ``traffic``: greedy longest-processing-time assignment over
@@ -176,9 +293,12 @@ def auto_segmentation_for(layers, n_segments: int = 4, slots_per_seg: int = 2,
     *units* while the layers land on them in chain order, which can be
     maximally imbalanced.
     """
-    groups = layer_groups(layers)
+    _, _, eff_n_in = connectivity(layers, edges)
+    groups = _tile(layers, eff_n_in)
     widths = [g.width for g in groups]
-    costs = [float(g.n_rows * layers[g.layer].n_in) for g in groups]
+    # synaptic-op cost covers every in-edge: lateral/recurrent columns are
+    # real crossbar work, so a recurrent layer weighs its full fan-in
+    costs = [float(g.n_rows * eff_n_in[g.layer]) for g in groups]
     assert max(widths) <= slots_per_seg, \
         "a column group is atomic: raise slots_per_seg to its width"
     if traffic is not None:
@@ -218,22 +338,28 @@ def auto_segmentation_for(layers, n_segments: int = 4, slots_per_seg: int = 2,
 # traffic profiling
 
 
-def profile_traffic(layers, raster):
+def profile_traffic(layers, raster, edges=(), n_ticks=None):
     """Profiling pass over the pure-jnp oracle: per-group spike rates.
 
     Returns (rates, traffic): ``rates[i]`` = spikes/tick emitted by group
     i; ``traffic[i, j]`` = AER events/tick flowing from group i to group j
-    (every spike a stripe emits becomes one event per downstream stripe —
-    the tile it lands in is part of the same co-located group).
+    (every spike a stripe emits becomes one event per destination stripe
+    per out-edge — the tile it lands in is part of the same co-located
+    group).  Cyclic edges are costed like any other: lateral synapses put
+    rate on the same-layer block (including the diagonal — a stripe's
+    spikes to itself are real channel traffic), recurrent projections on
+    the backward block, and a layer feeding the same destination through
+    several edges pays once per edge.
     """
     from repro.snn.workloads import oracle_rates
 
-    per_neuron, n_ticks = oracle_rates(layers, raster)
-    groups = layer_groups(layers)
+    per_neuron, nt = oracle_rates(layers, raster, edges=edges, n_ticks=n_ticks)
+    _, out_edges, eff_n_in = connectivity(layers, edges)
+    groups = _tile(layers, eff_n_in)
     rates = np.array([
-        per_neuron[g.layer][g.r0:g.r1].sum() / max(n_ticks, 1) for g in groups
+        per_neuron[g.layer][g.r0:g.r1].sum() / max(nt, 1) for g in groups
     ])
-    return rates, _rates_to_traffic(groups, rates)
+    return rates, _rates_to_traffic(groups, rates, _dsts_of(out_edges))
 
 
 def measure_traffic(states, meta):
@@ -242,6 +368,8 @@ def measure_traffic(states, meta):
     The measured analogue of ``profile_traffic``: run the workload once
     under any placement, then read each stripe owner's emitted-spike and
     tick counters out of the simulation state (``Controller.result_states``).
+    ``meta`` carries the run's connectivity (``edge_dsts``), so cyclic
+    edges are costed identically to the profiling pass.
     """
     groups = [g["group"] for g in meta["groups"]]
     cims = states["cims"]
@@ -252,15 +380,26 @@ def measure_traffic(states, meta):
         ticks = int(np.asarray(cims["ticks"][seg, slot]))
         rates.append(emitted / max(ticks, 1))
     rates = np.array(rates)
-    return rates, _rates_to_traffic(groups, rates)
+    return rates, _rates_to_traffic(groups, rates, meta["edge_dsts"])
 
 
-def _rates_to_traffic(groups, rates):
+def _dsts_of(out_edges):
+    return {l: [d for d, _ in out] for l, out in enumerate(out_edges) if out}
+
+
+def edge_dsts(layers, edges=()):
+    """Destination-layer multiset per source layer: {src: [dst, ...]} — one
+    entry per out-edge (a layer feeding another through both the chain and
+    a recurrent edge appears twice)."""
+    return _dsts_of(connectivity(layers, edges)[1])
+
+
+def _rates_to_traffic(groups, rates, edge_dsts_map):
     t = np.zeros((len(groups), len(groups)))
     for i, gi in enumerate(groups):
+        dst_layers = edge_dsts_map.get(gi.layer, [])
         for j, gj in enumerate(groups):
-            if gj.layer == gi.layer + 1:
-                t[i, j] = rates[i]
+            t[i, j] = rates[i] * dst_layers.count(gj.layer)
     return t
 
 
@@ -288,14 +427,24 @@ def _default_placement(groups, descs):
     return placement
 
 
-def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_000,
+def build_snn(layers, descs, raster, *, edges=(), n_ticks: int | None = None,
+              placement=None, tick_period: int = 10_000,
               channel_latency: int = 10_000, local_latency: int = 64,
               use_kernel: bool = False, in_cap: int | None = None,
               out_cap: int | None = None):
     """Assemble a runnable SNN simulation.
 
-    layers: [SNNLayer, ...] feed-forward chain; layers wider than one
-        crossbar are tiled into stripe groups (see ``layer_groups``)
+    layers: [SNNLayer, ...] feed-forward chain (possibly with ``lateral``
+        synapses); layers wider than one crossbar — in either dimension,
+        counting every in-edge's columns — are tiled into stripe groups
+        (see ``layer_groups``)
+    edges: (RecurrentEdge, ...) backward projections (dst <= src)
+    n_ticks: tick horizon — every unit runs exactly ``n_ticks`` LIF ticks
+        (``tick_limit``), matching the cycle-aware oracle's bounded window.
+        Mandatory for cyclic connectivity (lateral or recurrent edges:
+        activity can self-sustain, so an unbounded run may never
+        terminate); optional for feed-forward chains (None = unlimited,
+        the network drains by itself).
     descs: segment descriptors (segmentation_for / auto_segmentation_for)
     placement: group index -> first global CIM unit id; a group's ``width``
         units occupy consecutive slots of one segment (default: first-fit
@@ -316,10 +465,27 @@ def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_00
     n_layers = len(layers)
     for i in range(1, n_layers):
         assert layers[i].n_in == layers[i - 1].n_out, "layer chain mismatch"
-    groups = layer_groups(layers)
+    in_edges, out_edges, eff_n_in = connectivity(layers, edges)
+    if n_ticks is None:
+        assert not _cyclic(in_edges), (
+            "cyclic connectivity (lateral or recurrent edges) can "
+            "self-sustain: pass n_ticks to bound the run — the oracle "
+            "(snn.oracle_run) takes the same horizon")
+    else:
+        assert n_ticks >= 1, "n_ticks must be >= 1"
+        assert len(raster) <= n_ticks, (
+            f"raster has {len(raster)} timesteps but the tick horizon is "
+            f"{n_ticks}: later input would silently never integrate")
+    groups = _tile(layers, eff_n_in)
     by_layer = {}
     for gi, g in enumerate(groups):
         by_layer.setdefault(g.layer, []).append(gi)
+    # one (n_out, eff_n_in) matrix per layer: every in-edge's columns in
+    # canonical order — tiles slice this, the oracle contracts its blocks
+    eff_w = [
+        np.concatenate([w for _, w, _ in in_edges[l]], axis=1)
+        for l in range(n_layers)
+    ]
 
     cim_seg, cim_slot = [], []
     for s, d in enumerate(descs):
@@ -342,20 +508,27 @@ def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_00
         assert not taken.intersection(run), f"group {gi} overlaps another group"
         taken.update(run)
 
-    # tile -> unit wiring: weights, neuron counts, fan-out tables
+    # tile -> unit wiring: weights, neuron counts, fan-out tables.  One
+    # fan-out entry per (out-edge, destination tile) pair — an edge's
+    # column range in the destination's effective axon space starts at its
+    # col_off, so a stripe's rows land at axon col_off + r0 + row there,
+    # whether the edge points forward (the chain), sideways (lateral, the
+    # destination may be this very unit), or backward (recurrent).
     crossbars, cim_init = {}, {}
     fanout = 1
     entries_of = {}  # owner unit -> [(seg, slot, axon_base, row_lo, row_hi)]
     for gi, g in enumerate(groups):
         owner = placement[gi]
         ent = []
-        for gj in by_layer.get(g.layer + 1, []):
-            nxt = groups[gj]
-            for t, (c0, c1) in enumerate(nxt.col_edges):
-                lo, hi = max(0, c0 - g.r0), min(g.n_rows, c1 - g.r0)
-                if lo < hi:
-                    u = placement[gj] + t
-                    ent.append((cim_seg[u], cim_slot[u], g.r0 - c0, lo, hi))
+        for dst_layer, col_off in out_edges[g.layer]:
+            base = col_off + g.r0  # stripe's rows in dst's effective axons
+            for gj in by_layer.get(dst_layer, []):
+                nxt = groups[gj]
+                for t, (c0, c1) in enumerate(nxt.col_edges):
+                    lo, hi = max(0, c0 - base), min(g.n_rows, c1 - base)
+                    if lo < hi:
+                        u = placement[gj] + t
+                        ent.append((cim_seg[u], cim_slot[u], base - c0, lo, hi))
         entries_of[owner] = ent
         fanout = max(fanout, len(ent))
 
@@ -365,7 +538,7 @@ def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_00
         owner = placement[gi]
         for t, (c0, c1) in enumerate(g.col_edges):
             u = owner + t
-            crossbars[u] = np.asarray(l.weights[g.r0:g.r1, c0:c1], np.int8)
+            crossbars[u] = np.asarray(eff_w[g.layer][g.r0:g.r1, c0:c1], np.int8)
             ent = entries_of[owner] if t == 0 else []
             pad = fanout - len(ent)
             cim_init[u] = {
@@ -377,6 +550,7 @@ def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_00
                 "refrac_period": p.refrac_period,
                 "tick_period": tick_period,
                 "next_tick": tick_period,  # global tick grid: P_k = (k+1)·period
+                "tick_limit": 0 if n_ticks is None else int(n_ticks),
                 "owner_slot": cim_slot[owner],
                 "dst_seg": np.array([e[0] for e in ent] + [-1] * pad, np.int32),
                 "dst_slot": np.array([e[1] for e in ent] + [0] * pad, np.int32),
@@ -402,6 +576,8 @@ def build_snn(layers, descs, raster, *, placement=None, tick_period: int = 10_00
         "in_unit": in_tiles[0][0],
         "out_unit": unit_at(by_layer[n_layers - 1][0]),
         "n_out": layers[-1].n_out,
+        "n_ticks": n_ticks,
+        "edge_dsts": _dsts_of(out_edges),
         "out_groups": [
             (*unit_at(gi), groups[gi].r0, groups[gi].r1)
             for gi in by_layer[n_layers - 1]
@@ -423,7 +599,9 @@ def _inject_raster(pending, n_segments, in_tiles, raster, tick_period):
     inputs out), so each event is replicated once per stripe, addressed to
     the column tile covering its axon.  Events land in the inboxes of the
     segments hosting those tiles; each inbox keeps half its capacity free
-    for runtime spike traffic.
+    for runtime spike traffic.  The external edge is always the first of
+    layer 0's in-edges (``connectivity``), so raster axon a is effective
+    column a even when lateral/recurrent columns follow it.
     """
     raster = np.asarray(raster)
     ts, axons = np.nonzero(raster)

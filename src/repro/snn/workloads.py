@@ -2,12 +2,23 @@
 the pure-jnp network oracle the VP simulation is verified against.
 
 Timing contract shared with the VP mapping (snn/topology.py): one tick of
-axonal delay per layer hop.  Input timestep k is integrated by layer 0 at
-tick k; layer l's spikes from tick j reach layer l+1 at tick j+1.  The
-oracle simulates T + L + 1 ticks — after the input ends, a layer can never
-fire again once its upstream goes quiet (leak >= 0 + reset-to-zero), so
-output spike *counts* are exact regardless of when the event-driven VP run
-terminates.
+axonal delay per hop — *every* hop, whether the edge points forward along
+the chain, sideways (lateral synapses), or backward (recurrent
+projections).  Input timestep k is integrated by layer 0 at tick k; any
+layer's spikes from tick j reach every destination of its out-edges at
+tick j+1.  The oracle is therefore cycle-aware by construction: it holds
+every layer's previous-tick spike vector and feeds each layer the
+concatenation of its in-edge sources (``connectivity``), contracted
+per-edge exactly like the VP's disjoint axon ranges
+(``neuron.lif_step_multi``).
+
+Horizons: a feed-forward chain simulates T + L + 1 ticks — after the input
+ends, a layer can never fire again once its upstream goes quiet (leak >= 0
++ reset-to-zero), so output spike *counts* are exact regardless of when
+the event-driven VP run terminates.  A cyclic network can self-sustain, so
+the caller must pass an explicit ``n_ticks``; the VP runs the identical
+bounded window (``build_snn(n_ticks=...)`` -> per-unit ``tick_limit``),
+keeping VP-vs-oracle equality bit-exact.
 """
 from __future__ import annotations
 
@@ -15,8 +26,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.snn.neuron import LIFParams, lif_step, pool_state
-from repro.snn.topology import SNNLayer
+from repro.snn import topology
+from repro.snn.neuron import LIFParams, lif_step_multi, pool_state
+from repro.snn.topology import RecurrentEdge, SNNLayer, connectivity
 
 
 def rate_encode(x, t_steps: int, seed: int = 0):
@@ -40,27 +52,75 @@ def random_snn(layer_sizes=(64, 48, 10), seed: int = 0, w_lo: int = -4, w_hi: in
     return layers
 
 
-def _oracle(layers, raster):
-    """Shared oracle loop; returns (output_counts, per_layer_totals,
-    per_layer_per_neuron_totals, n_ticks)."""
+def random_recurrent_snn(layer_sizes=(48, 40, 12), seed: int = 0,
+                         w_lo: int = -4, w_hi: int = 8, inhibition: int = 6):
+    """Recurrent LIF network: ``random_snn``'s chain plus three kinds of
+    cyclic connectivity (TrueNorth/RANC-style core workloads).
+
+    - the last hidden layer is Elman-style self-recurrent: a random
+      ``lateral`` matrix feeds its own spikes back one tick later;
+    - the output layer is a winner-take-all pool: ``lateral`` inhibition
+      (``-inhibition`` off-diagonal) suppresses the non-winning neurons;
+    - the output projects *backward* onto the hidden layer
+      (``RecurrentEdge``), closing a two-layer loop.
+
+    Returns (layers, edges) for ``build_snn(..., edges=edges, n_ticks=...)``
+    / ``oracle_run(..., edges=edges, n_ticks=...)``.
+    """
+    rng = np.random.default_rng(seed)
+    sizes = list(layer_sizes)
+    n_layers = len(sizes) - 1
+    assert n_layers >= 2, "a recurrent job needs a hidden and an output layer"
+    layers = []
+    for i, (n_in, n_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        w = rng.integers(w_lo, w_hi, (n_out, n_in)).astype(np.int8)
+        if i == n_layers - 2:  # Elman hidden: mild random self-coupling
+            lateral = rng.integers(-2, 3, (n_out, n_out)).astype(np.int8)
+            thresh = max(n_in + n_out // 4, 1)
+        elif i == n_layers - 1:  # WTA output: mutual lateral inhibition
+            lateral = (-inhibition * (1 - np.eye(n_out, dtype=np.int64))).astype(np.int8)
+            thresh = max(n_in, 1)
+        else:
+            lateral = None
+            thresh = max(n_in, 1)
+        layers.append(SNNLayer(w, LIFParams(thresh=thresh, leak=1), lateral=lateral))
+    feedback = rng.integers(-2, 3, (sizes[-2], sizes[-1])).astype(np.int8)
+    edges = (RecurrentEdge(src=n_layers - 1, dst=n_layers - 2, weights=feedback),)
+    return layers, edges
+
+
+def _oracle(layers, raster, edges=(), n_ticks=None):
+    """Shared cycle-aware oracle loop; returns (output_counts,
+    per_layer_totals, per_layer_per_neuron_totals, n_ticks)."""
     import jax.numpy as jnp
 
     t_steps, n_in = raster.shape
     n_layers = len(layers)
     assert layers[0].n_in == n_in
+    in_edges, _, _ = connectivity(layers, edges)
+    if n_ticks is None:
+        assert not topology._cyclic(in_edges), (
+            "cyclic connectivity can self-sustain: pass the n_ticks horizon "
+            "(the VP runs the same bounded tick_limit)")
+        n_ticks = t_steps + n_layers + 1
+    assert t_steps <= n_ticks, "raster outlives the tick horizon"
+    w_blocks = [[jnp.asarray(w) for _, w, _ in in_edges[l]]
+                for l in range(n_layers)]
     states = [pool_state(l.n_out) for l in layers]
     prev = [jnp.zeros((l.n_out,), jnp.int32) for l in layers]
     per_neuron = [np.zeros(l.n_out, np.int64) for l in layers]
     totals = np.zeros(n_layers, np.int64)
     zero_in = jnp.zeros((n_in,), jnp.int32)
-    n_ticks = t_steps + n_layers + 1
     for j in range(n_ticks):
-        feeds = [jnp.asarray(raster[j], jnp.int32) if j < t_steps else zero_in]
-        feeds += prev[:-1]
+        ext = jnp.asarray(raster[j], jnp.int32) if j < t_steps else zero_in
+        # every layer sees *last* tick's spikes of every source (one tick
+        # of axonal delay per hop, cyclic edges included)
+        feeds = [[ext if src < 0 else prev[src] for src, _, _ in in_edges[l]]
+                 for l in range(n_layers)]
         new_prev = []
         for l, layer in enumerate(layers):
-            states[l], fired = lif_step(
-                states[l], jnp.asarray(layer.weights), feeds[l], layer.params
+            states[l], fired = lif_step_multi(
+                states[l], w_blocks[l], feeds[l], layer.params
             )
             new_prev.append(fired)
             per_neuron[l] += np.asarray(fired, np.int64)
@@ -69,17 +129,18 @@ def _oracle(layers, raster):
     return per_neuron[-1].copy(), totals, per_neuron, n_ticks
 
 
-def oracle_run(layers, raster):
-    """Pure-jnp reference simulation; returns (output_counts, per_layer_totals)."""
-    counts, totals, _, _ = _oracle(layers, raster)
+def oracle_run(layers, raster, edges=(), n_ticks=None):
+    """Pure-jnp reference simulation; returns (output_counts,
+    per_layer_totals).  ``edges``/``n_ticks``: see the module docstring."""
+    counts, totals, _, _ = _oracle(layers, raster, edges, n_ticks)
     return counts, totals
 
 
-def oracle_rates(layers, raster):
+def oracle_rates(layers, raster, edges=(), n_ticks=None):
     """Profiling pass: per-layer per-neuron emitted-spike totals + the tick
     count — the inputs to snn/topology.profile_traffic's traffic matrix."""
-    _, _, per_neuron, n_ticks = _oracle(layers, raster)
-    return per_neuron, n_ticks
+    _, _, per_neuron, nt = _oracle(layers, raster, edges, n_ticks)
+    return per_neuron, nt
 
 
 @dataclasses.dataclass
@@ -88,6 +149,8 @@ class SNNJob:
     raster: np.ndarray
     expected_counts: np.ndarray  # oracle output spike counts
     expected_total: int  # oracle all-layer spike total
+    edges: tuple = ()  # recurrent projections (RecurrentEdge, ...)
+    n_ticks: int | None = None  # tick horizon (mandatory when cyclic)
 
 
 def snn_inference_job(layer_sizes=(64, 48, 10), t_steps: int = 12,
@@ -99,3 +162,26 @@ def snn_inference_job(layer_sizes=(64, 48, 10), t_steps: int = 12,
     raster = rate_encode(x, t_steps, seed=seed + 2)
     counts, totals = oracle_run(layers, raster)
     return SNNJob(layers, raster, counts, int(totals.sum()))
+
+
+def snn_recurrent_job(layer_sizes=(48, 40, 12), t_steps: int = 10,
+                      rate: float = 0.5, seed: int = 0,
+                      settle: int = 6) -> SNNJob:
+    """Recurrent inference job: a ``random_recurrent_snn`` network (Elman
+    hidden recurrence, WTA output inhibition, output->hidden feedback)
+    under a rate-coded raster, verified over a bounded tick horizon.
+
+    ``settle`` extra ticks after the input window let the cycles ring; the
+    horizon ``n_ticks = T + L + settle`` is part of the job — the VP ticks
+    exactly that many times per unit and the oracle simulates the same
+    window, so expected counts are exact even when the recurrent activity
+    would self-sustain past it.
+    """
+    rng = np.random.default_rng(seed + 1)
+    layers, edges = random_recurrent_snn(layer_sizes, seed=seed)
+    x = rng.random(layer_sizes[0]) * rate * 2
+    raster = rate_encode(x, t_steps, seed=seed + 2)
+    n_ticks = t_steps + len(layers) + settle
+    counts, totals = oracle_run(layers, raster, edges=edges, n_ticks=n_ticks)
+    return SNNJob(layers, raster, counts, int(totals.sum()),
+                  edges=edges, n_ticks=n_ticks)

@@ -72,6 +72,13 @@ def cim_state(n_slots: int, snn_fanout: int = 1):
         "refrac_period": z(n_slots),
         "tick_period": z(n_slots),  # SNN tick pitch (0 = never ticks)
         "next_tick": z(n_slots),  # sim time of the next scheduled tick
+        # bounded-horizon gate for cyclic nets (0 = unlimited): a unit whose
+        # ``ticks`` counter reaches tick_limit stops ticking forever, and
+        # spikes addressed to ticks past the horizon are consumed + dropped
+        # (vp/platform.py) — recurrent/lateral connectivity can self-sustain
+        # indefinitely, so termination needs an explicit tick horizon that
+        # the cycle-aware oracle (snn/workloads.py) shares exactly.
+        "tick_limit": z(n_slots),
         # AER fan-out table, one row per destination (wide layers fan a
         # stripe's spikes out to every downstream shard): neuron rows in
         # [row_lo, row_hi) route to (dst_seg, dst_slot) at axon
@@ -194,7 +201,12 @@ def snn_tick(cims, t_gate, use_kernel: bool = False, grouped: bool = False):
     to reach pending.  One tick per quantum; segment time advances at most
     one channel latency per round (monotone min-peer bound), so ticks are
     never skipped.  Bit-identical across all controller backends and all
-    segmentations by construction.
+    segmentations by construction.  The guard is direction-agnostic: a
+    fan-out entry may target a *later* layer, the unit's own layer
+    (lateral), or an *earlier* one (recurrent feedback) — in every case a
+    spike emitted at tick k integrates at the destination's tick k+1, so
+    cyclic nets keep the same one-tick-per-hop delay semantics and the
+    same bit-exactness argument (snn/topology.py).
 
     ``grouped`` (static; cfg.snn_grouped) enables multi-crossbar layers:
     a neuron stripe whose fan-in exceeds one crossbar's columns occupies a
@@ -215,6 +227,11 @@ def snn_tick(cims, t_gate, use_kernel: bool = False, grouped: bool = False):
         & (cims["mode"] == isa.CIM_MODE_SPIKE)
         & (cims["tick_period"] > 0)
         & (t_gate >= cims["next_tick"] + cims["tick_period"])
+        # bounded horizon (cyclic nets): tick_limit > 0 caps the unit at
+        # exactly tick_limit ticks — ticks 0..tick_limit-1 fire, then the
+        # unit is quiescent forever (recurrent activity need not die out,
+        # so the horizon is what makes termination decidable)
+        & ((cims["tick_limit"] == 0) | (cims["ticks"] < cims["tick_limit"]))
     )
     is_contrib = None
     if grouped:

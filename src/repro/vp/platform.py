@@ -97,6 +97,7 @@ def segment_state(cfg: VPConfig):
             "instrs": jnp.zeros((), jnp.int32),
             "msgs": jnp.zeros((), jnp.int32),
             "outbox_peak": jnp.zeros((), jnp.int32),  # overflow sentinel
+            "store_peak": jnp.zeros((), jnp.int32),  # store-log sentinel
             "txn_hist": jnp.zeros((8,), jnp.int32),  # Fig. 1a trace histogram
         },
     }
@@ -195,9 +196,18 @@ def _apply_inbox(cfg: VPConfig, st, pending):
         # bit-identical to the old per-slot loop and n_cim_slots× cheaper).
         in_range = spk & (slot_s >= 0) & (slot_s < cfg.n_cim_slots)
         su = jnp.clip(slot_s, 0, cfg.n_cim_slots - 1)
+        # a unit that exhausted its tick horizon (tick_limit, cyclic nets)
+        # can never integrate again: spikes emitted at its peers' final
+        # tick would belong to tick tick_limit, which never fires — they
+        # drop exactly like spikes to never-ticking units.  The ticks
+        # counter only reaches the limit after the unit's last tick, and a
+        # tick-k spike's t_avail exceeds next_tick until the receiver has
+        # fired tick k itself, so eligibility is deterministic under every
+        # segmentation and backend.
         eligible = in_range & (cims["tick_period"][su] > 0) & (
             cims["mode"][su] == isa.CIM_MODE_SPIKE
-        )
+        ) & ((cims["tick_limit"][su] == 0)
+             | (cims["ticks"][su] < cims["tick_limit"][su]))
         msu = eligible & (pending["t_avail"] <= cims["next_tick"][su])
         # only drop once the event has actually arrived in local time:
         # a future spike racing a runtime eligibility change must wait
@@ -432,7 +442,13 @@ def make_segment_step(cfg: VPConfig, quantum: int):
             st["icache"] = hot["icache"]
             st["dcache"] = hot["dcache"]
             st["scratch"] = hot["scratch"]
-            st["stats"] = hot["stats"]
+            st["stats"] = dict(hot["stats"])
+            # sticky watermark: past-capacity store-log appends clip onto the
+            # last slot (silently lost stores), so a quantum that needed more
+            # than cfg.store_log entries must raise loudly in the controller
+            st["stats"]["store_peak"] = jnp.maximum(
+                st["stats"]["store_peak"], hot["store_log"]["count"]
+            )
             st["dram"] = {**hot["dram_meta"], "data": dram_data}
         else:
             st = dict(st)  # CPU-free: the instruction machinery is dead code
@@ -505,12 +521,14 @@ def make_segment_step(cfg: VPConfig, quantum: int):
 # termination / overflow reducer
 
 
-def termination_flags(states, pending, in_cap: int, out_cap: int):
-    """Traced ``(done, inbox_over, outbox_over)`` over the stacked simulation.
+def termination_flags(states, pending, in_cap: int, out_cap: int,
+                      store_log: int):
+    """Traced ``(done, inbox_over, outbox_over, store_over)`` over the
+    stacked simulation.
 
     This is the controller's termination predicate and overflow watermark
     check as *traced* code, so it runs both host-side (one fused device
-    sync instead of four separate ``bool(jnp.any(...))`` round-trips) and
+    sync instead of separate ``bool(jnp.any(...))`` round-trips) and
     inside the device-resident megaloop's ``lax.while_loop`` (no host
     round-trip at all).  Semantics mirror the original host-side checks:
 
@@ -520,12 +538,15 @@ def termination_flags(states, pending, in_cap: int, out_cap: int):
       (accumulated-but-unintegrated spikes, or an active neuron already at
       threshold — possible when a runtime CIM_REG_MODE write lowers thresh
       under a charged membrane; units that never tick can never drain and
-      are not busy), and no valid pending message.  With an empty buffer
-      and everyone subthreshold, leak alone can never cross threshold
-      (leak >= 0, reset-to-zero), so idling is final.
-    - ``inbox_over`` / ``outbox_over``: the sticky high-water marks carried
-      in the state ever exceeded IN_CAP / OUT_CAP (see
-      ``channel.inbox_overflowed``); the controller raises host-side.
+      are not busy, and units that exhausted their ``tick_limit`` horizon —
+      recurrent nets can self-sustain forever — are done by definition),
+      and no valid pending message.  With an empty buffer and everyone
+      subthreshold, leak alone can never cross threshold (leak >= 0,
+      reset-to-zero), so idling is final.
+    - ``inbox_over`` / ``outbox_over`` / ``store_over``: the sticky
+      high-water marks carried in the state ever exceeded in_cap /
+      out_cap / store_log (see ``channel.inbox_overflowed``); the
+      controller raises host-side with the cap kwarg to fix.
     """
     from repro.vp import isa
 
@@ -533,7 +554,10 @@ def termination_flags(states, pending, in_cap: int, out_cap: int):
     active_cpu = jnp.any(cpus["present"] & ~cpus["halted"])
     cims = states["cims"]
     busy_cim = jnp.any(cims["state"] == 2)
-    ticking = (cims["mode"] == isa.CIM_MODE_SPIKE) & (cims["tick_period"] > 0)
+    ticking = (
+        (cims["mode"] == isa.CIM_MODE_SPIKE) & (cims["tick_period"] > 0)
+        & ((cims["tick_limit"] == 0) | (cims["ticks"] < cims["tick_limit"]))
+    )
     pending_in = (cims["in_buf"] != 0).any(-1)
     due = ((cims["v"] >= cims["thresh"][..., None]) & (cims["refrac"] == 0)).any(-1)
     busy_snn = jnp.any(ticking & (pending_in | due))
@@ -541,4 +565,5 @@ def termination_flags(states, pending, in_cap: int, out_cap: int):
     done = ~(active_cpu | busy_cim | busy_snn | msgs)
     inbox_over = ch.inbox_overflowed(pending, in_cap)
     outbox_over = (states["stats"]["outbox_peak"] > out_cap).any()
-    return done, inbox_over, outbox_over
+    store_over = (states["stats"]["store_peak"] > store_log).any()
+    return done, inbox_over, outbox_over, store_over
