@@ -15,6 +15,14 @@ bit-exactly against the cycle-aware oracle — spikes/sec per segmentation
 strategy shows how placement copes when every hot layer also talks to
 itself and to earlier layers.
 
+The *hybrid* scenario is the paper's headline co-simulation: live RISC-V
+CPUs, dense-mode CIM units, and spiking layers in ONE platform — CPU0
+runs the dense VMM offload while CPU1 injects the SNN raster through
+tick-addressed CIM_REG_SPIKE stores and reads the output counts back via
+CIM_REG_COUNTS, publishing them to shared DRAM.  Both halves are
+oracle-verified while timed, per platform shape (split / packed /
+traffic-aware auto).
+
 The *wide* scenario exercises multi-crossbar layers: a 600-neuron hidden
 layer shards into three row stripes, and its 600-axon consumer tiles into
 a co-located column group.  Naive (chain-order uniform) placement is
@@ -42,11 +50,12 @@ WIDE_SIZES = (128, 600, 64)  # 600 out -> 3 row stripes; 600 in -> 3-tile group
 WIDE_T_STEPS = 10
 
 
-def _timed(cfg, states, pending, backend, max_rounds=400, fused=None):
-    warm = Controller(cfg, states, pending, backend=backend, quantum=QUANTUM)
+def _timed(cfg, states, pending, backend, max_rounds=400, fused=None,
+           quantum=QUANTUM):
+    warm = Controller(cfg, states, pending, backend=backend, quantum=quantum)
     warm.run(max_rounds=2, check_every=2, fused=fused)  # compile round + megastep
     warm.block_until_ready()
-    ctl = Controller(cfg, states, pending, backend=backend, quantum=QUANTUM)
+    ctl = Controller(cfg, states, pending, backend=backend, quantum=quantum)
     t0 = time.perf_counter()
     ctl.run(max_rounds=max_rounds, check_every=2, fused=fused)
     host = time.perf_counter() - t0
@@ -177,6 +186,53 @@ def run_megaloop(sizes=MEGA_SIZES, t_steps=MEGA_T_STEPS, seed=2):
     }
 
 
+HYBRID_SIZES = (48, 40, 16)
+HYBRID_T_STEPS = 12
+HYBRID_QUANTUM = 700  # live CPUs need real instruction windows
+
+
+def run_hybrid(strategies=("split", "packed", "auto"), sizes=HYBRID_SIZES,
+               t_steps=HYBRID_T_STEPS, seed=5):
+    """The paper's headline co-simulation scenario as a benchmark: dense
+    VMM offload on CPU0's units while CPU1 injects a rate-coded raster
+    into spiking layers over MMIO (CIM_REG_SPIKE) and reads the output
+    counts back (CIM_REG_COUNTS), everything in one platform.
+
+    Per platform shape (split / packed / traffic-aware auto with the
+    injector pseudo-group pinned to CPU1's segment), the job runs on the
+    sq and pll backends; both halves are verified — the dense O matrix
+    and the CPU-published spike counts in shared DRAM against their
+    oracles, spike totals across backends — while being timed.
+    """
+    job = snn.hybrid_job(sizes, t_steps=t_steps, rate=0.5, seed=seed)
+    rows = []
+    for strategy in strategies:
+        cfg, states, pending, meta = snn.build_hybrid(
+            job, strategy, channel_latency=2000)
+        t_sq, ctl_sq = _timed(cfg, states, pending, "sequential",
+                              max_rounds=800, quantum=HYBRID_QUANTUM)
+        t_pll, ctl_pll = _timed(cfg, states, pending, "vmap",
+                                max_rounds=800, quantum=HYBRID_QUANTUM)
+        spikes = snn.total_spikes(ctl_pll.result_states())
+        assert spikes == snn.total_spikes(ctl_sq.result_states()), \
+            "backends disagree on spike totals"
+        o, counts = snn.hybrid_results(ctl_pll.result_states(), meta)
+        ok = bool(np.array_equal(o, job.dense_expected))
+        ok &= bool(np.array_equal(counts, job.snn.expected_counts))
+        ok &= spikes == job.snn.expected_total
+        rows.append({
+            "strategy": strategy, "segments": cfg.n_segments,
+            "n_ticks": job.snn.n_ticks, "spikes": spikes,
+            "sq_s": t_sq, "pll_s": t_pll, "speedup": t_sq / t_pll,
+            "sq_spikes_per_s": spikes / t_sq,
+            "pll_spikes_per_s": spikes / t_pll,
+            "rounds": ctl_pll.rounds_run,
+            "pll_rounds_per_s": ctl_pll.rounds_run / t_pll,
+            "correct": ok,
+        })
+    return rows
+
+
 def run_wide(sizes=WIDE_SIZES, t_steps=WIDE_T_STEPS, seed=4):
     """Naive vs spike-traffic-aware placement of a wide multi-crossbar net.
 
@@ -233,6 +289,15 @@ def main(out=print):
             f" spikes={r['spikes']} n_ticks={r['n_ticks']}"
             f" sq_spk_per_s={r['sq_spikes_per_s']:.0f}"
             f" pll_spk_per_s={r['pll_spikes_per_s']:.0f}"
+            f" segments={r['segments']} ok={r['correct']}")
+    hy_net = "x".join(str(s) for s in HYBRID_SIZES)
+    for r in run_hybrid():
+        out(f"fig5snn/hybrid/{r['strategy']}/{hy_net},{r['sq_s']*1e6:.0f},"
+            f"sq_vs_pll_speedup={r['speedup']:.2f}x"
+            f" spikes={r['spikes']} n_ticks={r['n_ticks']}"
+            f" sq_spk_per_s={r['sq_spikes_per_s']:.0f}"
+            f" pll_spk_per_s={r['pll_spikes_per_s']:.0f}"
+            f" pll_rounds_per_s={r['pll_rounds_per_s']:.0f}"
             f" segments={r['segments']} ok={r['correct']}")
     m = run_megaloop()
     mega_net = "x".join(str(s) for s in MEGA_SIZES)

@@ -11,7 +11,10 @@ Rules (stdlib-only, deterministic, no network):
   3. every command in a fenced ``bash`` block references an existing
      python script / module / shell script, and any ``--flags`` it passes
      are accepted by the target's ``--help``;
-  4. every fenced ``python`` block compiles (syntax check, no execution).
+  4. every fenced ``python`` block compiles (syntax check, no execution);
+  5. no orphaned pages: every checked document (docs/*.md,
+     benchmarks/README.md) must be reachable from README.md through
+     relative markdown links — a page nobody links to silently rots.
 
 Run:  python scripts/check_docs.py        (exit 1 + a report on problems)
 """
@@ -151,6 +154,34 @@ def check_doc(doc: Path, problems: list):
                     problems.append(f"{rel}:{i}: dangling path reference {span!r}")
 
 
+def check_reachability(problems: list):
+    """Rule 5: every checked document must be reachable from README.md by
+    following relative markdown links (BFS over the doc graph)."""
+    seen: set = set()
+    queue = [ROOT / "README.md"]
+    while queue:
+        doc = queue.pop()
+        if doc in seen or not doc.exists():
+            continue
+        seen.add(doc)
+        for link in LINK.findall(doc.read_text()):
+            if "://" in link or link.startswith("#"):
+                continue
+            target = link.split("#")[0]
+            if not target.endswith(".md"):
+                continue
+            for base in (ROOT, doc.parent):
+                cand = (base / target)
+                if cand.exists():
+                    queue.append(cand.resolve())
+                    break
+    for page in DOCS:
+        if page.resolve() not in seen:
+            problems.append(
+                f"{page.relative_to(ROOT)}: orphaned documentation page "
+                "(not reachable from README.md via markdown links)")
+
+
 def main() -> int:
     problems: list = []
     if not DOCS:
@@ -158,6 +189,7 @@ def main() -> int:
         return 1
     for doc in DOCS:
         check_doc(doc, problems)
+    check_reachability(problems)
     if problems:
         print(f"{len(problems)} documentation problem(s):")
         for p in problems:

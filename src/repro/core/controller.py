@@ -149,9 +149,10 @@ class Controller:
                     at_check = ((r0 + i) % check_every) == 0
 
                     def checked(_):
-                        done, in_over, out_over, st_over = pf.termination_flags(
-                            st, pen, cfg.in_cap, cfg.out_cap, cfg.store_log)
-                        over = in_over | out_over | st_over
+                        done, in_over, out_over, st_over, late = \
+                            pf.termination_flags(
+                                st, pen, cfg.in_cap, cfg.out_cap, cfg.store_log)
+                        over = in_over | out_over | st_over | late
                         return done & ~over, over
 
                     # cond, not where: non-check rounds skip the reductions
@@ -320,6 +321,17 @@ class Controller:
                 f"{self.cfg.store_log} stores in one quantum); raise store_log "
                 "(builder kwarg) or shrink the quantum"
             )
+        mmio_late = np.asarray(states["stats"]["snn_mmio_late"])
+        if (mmio_late > 0).any():
+            raise RuntimeError(
+                f"late SNN MMIO ops ({mmio_late.tolist()} per segment): a "
+                "CIM_REG_SPIKE store executed at/after its target tick's grid "
+                "time, or a CIM_REG_COUNTS readback was served after the unit "
+                "ticked past the requested count — the result would depend on "
+                "round timing, not the tick grid.  Issue the op earlier in "
+                "the program, or raise tick_period (builder kwarg) so the "
+                "injection window covers it"
+            )
 
     def done(self) -> bool:
         """Termination check + loud overflow validation (one device sync).
@@ -327,15 +339,16 @@ class Controller:
         The predicate itself lives in traced code
         (``platform.termination_flags`` — see its docstring for the exact
         semantics: running CPUs, in-flight CIM OPs, drainable spike-mode
-        work, pending messages); here it is evaluated as one fused jitted
-        call returning a single (4,) bool array — done + the inbox/outbox/
-        store-log watermarks — instead of separate ``bool(jnp.any(...))``
+        work, pending spike-count readbacks, pending messages); here it is
+        evaluated as one fused jitted call returning a single (5,) bool
+        array — done + the inbox/outbox/store-log watermarks and the
+        late-SNN-MMIO flag — instead of separate ``bool(jnp.any(...))``
         host round-trips.
         """
-        d, in_over, out_over, store_over = np.asarray(
+        d, in_over, out_over, store_over, mmio_late = np.asarray(
             self._flags_fn(self._stacked(), self._pending_stacked())
         )
-        if in_over or out_over or store_over:
+        if in_over or out_over or store_over or mmio_late:
             self._check_overflow()  # raises with the detailed watermark message
         return bool(d)
 

@@ -91,7 +91,8 @@ def auto_segmentation(module_costs: dict, n_segments: int):
 
 
 def traffic_partition(widths, loads, traffic, n_segments: int,
-                      slots_per_seg: int, refine_passes: int = 4):
+                      slots_per_seg: int, refine_passes: int = 4,
+                      pinned=None):
     """Spike-traffic-aware placement of shard groups onto segments.
 
     widths:  slots each group needs (a multi-crossbar column group occupies
@@ -105,6 +106,14 @@ def traffic_partition(widths, loads, traffic, n_segments: int,
              is excluded from the cut up front, so lateral-heavy groups
              are neither attracted to nor repelled from any segment by
              their own chatter.
+    pinned:  optional {group_index: segment_id} of groups whose placement
+             is fixed — e.g. the *injector pseudo-group* of a hybrid
+             workload (``snn.profile_traffic(injector=True)``): a width-0
+             stand-in for the live CPU whose MMIO spike injection and
+             count readback are real cross-segment events, so CPU<->CIM
+             traffic enters the cut and pulls the chatty input/output
+             stripes toward the CPU's segment.  Pinned groups seed their
+             segments first and never move in refinement.
 
     Minimizes the cross-segment traffic cut under per-segment slot budgets:
     groups are seeded greedily in descending traffic-degree order, each
@@ -120,6 +129,7 @@ def traffic_partition(widths, loads, traffic, n_segments: int,
     widths = np.asarray(widths, int)
     loads = np.asarray(loads, float)
     traffic = np.asarray(traffic, float)
+    pinned = dict(pinned or {})
     g = len(widths)
     assert traffic.shape == (g, g) and len(loads) == g
     traffic = traffic - np.diag(np.diag(traffic))  # self-traffic never cut
@@ -131,13 +141,22 @@ def traffic_partition(widths, loads, traffic, n_segments: int,
     used = np.zeros(n_segments, int)
     load = np.zeros(n_segments, float)
 
+    for i, s in sorted(pinned.items()):
+        assert 0 <= s < n_segments, f"pinned group {i} to missing segment {s}"
+        assert used[s] + widths[i] <= slots_per_seg, \
+            f"pinned group {i} does not fit segment {s}'s slot budget"
+        assign[i] = s
+        used[s] += widths[i]
+        load[s] += loads[i]
+
     def affinity(i, s):
         members = np.flatnonzero(assign == s)
         return sym[i, members].sum()
 
     # widest groups first (first-fit-decreasing keeps atomic groups
     # placeable), then traffic degree so hot groups seed their segments
-    order = sorted(range(g), key=lambda i: (-widths[i], -sym[i].sum(), -loads[i], i))
+    order = sorted((i for i in range(g) if i not in pinned),
+                   key=lambda i: (-widths[i], -sym[i].sum(), -loads[i], i))
     for i in order:
         feas = [s for s in range(n_segments) if used[s] + widths[i] <= slots_per_seg]
         if not feas:
@@ -153,6 +172,8 @@ def traffic_partition(widths, loads, traffic, n_segments: int,
     for _ in range(refine_passes):
         moved = False
         for i in range(g):
+            if i in pinned:
+                continue
             best_s, best_gain = assign[i], 0.0
             here = affinity(i, assign[i])
             for s in range(n_segments):
@@ -221,6 +242,19 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
             snn_fanout = max(snn_fanout, int(np.size(fields["dst_seg"])))
         if "owner_slot" in fields and int(fields["owner_slot"]) != cim_slot[g]:
             snn_grouped = True
+    # the global LIF tick grid: CPU spike injection (CIM_REG_SPIKE) is
+    # tick-addressed, so the platform must know *the* tick pitch statically —
+    # every ticking spike-mode unit shares it (build_snn always wires one
+    # period; next_tick already assumes the shared grid P_k = (k+1)*period)
+    periods = sorted({
+        int(f["tick_period"]) for f in (cim_init or {}).values()
+        if int(f.get("mode", 0)) == isa.CIM_MODE_SPIKE
+        and int(f.get("tick_period", 0)) > 0
+    })
+    assert len(periods) <= 1, (
+        f"spike-mode units disagree on tick_period ({periods}): the AER tick "
+        "grid — and tick-addressed CPU spike injection — is global")
+    snn_tick_period = periods[0] if periods else 0
     cfg = pf.VPConfig(
         n_segments=n,
         in_cap=pf.IN_CAP if in_cap is None else in_cap,
@@ -247,6 +281,7 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
                     for f in (cim_init or {}).values()),
         snn_fanout=snn_fanout,
         snn_grouped=snn_grouped,
+        snn_tick_period=snn_tick_period,
     )
     states = []
     for s, d in enumerate(descs):

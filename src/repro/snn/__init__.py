@@ -29,9 +29,11 @@ from repro.snn.topology import (
     SNNLayer,
     StripeGroup,
     auto_segmentation_for,
+    build_hybrid,
     build_snn,
     connectivity,
     edge_dsts,
+    hybrid_results,
     is_cyclic,
     layer_groups,
     measure_traffic,
@@ -42,7 +44,9 @@ from repro.snn.topology import (
     total_spikes,
 )
 from repro.snn.workloads import (
+    HybridJob,
     SNNJob,
+    hybrid_job,
     oracle_rates,
     oracle_run,
     random_recurrent_snn,

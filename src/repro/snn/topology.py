@@ -63,6 +63,7 @@ import numpy as np
 
 from repro.core import segmentation as sg
 from repro.vp import isa
+from repro.vp import platform as pf
 from repro.vp.cim import XBAR
 from repro.snn.neuron import LIFParams
 
@@ -338,7 +339,7 @@ def auto_segmentation_for(layers, n_segments: int = 4, slots_per_seg: int = 2,
 # traffic profiling
 
 
-def profile_traffic(layers, raster, edges=(), n_ticks=None):
+def profile_traffic(layers, raster, edges=(), n_ticks=None, injector=False):
     """Profiling pass over the pure-jnp oracle: per-group spike rates.
 
     Returns (rates, traffic): ``rates[i]`` = spikes/tick emitted by group
@@ -350,6 +351,16 @@ def profile_traffic(layers, raster, edges=(), n_ticks=None):
     spikes to itself are real channel traffic), recurrent projections on
     the backward block, and a layer feeding the same destination through
     several edges pays once per edge.
+
+    ``injector=True`` (hybrid jobs, where a live CPU injects the raster
+    through ``CIM_REG_SPIKE`` instead of pre-scheduled events): the matrix
+    gains one trailing row/column for the *injector pseudo-group* — row =
+    the MMIO injection stream into every layer-0 group (raster events/tick,
+    replicated per stripe like the events themselves), column = the
+    spike-count readback DMA out of each output-layer group.  Pin the
+    pseudo-group to the CPU's segment via ``traffic_partition(pinned=...)``
+    and CPU<->CIM MMIO traffic enters the cut like any spike traffic;
+    ``rates`` keeps length G (the pseudo-group emits MMIO, not spikes).
     """
     from repro.snn.workloads import oracle_rates
 
@@ -359,7 +370,19 @@ def profile_traffic(layers, raster, edges=(), n_ticks=None):
     rates = np.array([
         per_neuron[g.layer][g.r0:g.r1].sum() / max(nt, 1) for g in groups
     ])
-    return rates, _rates_to_traffic(groups, rates, _dsts_of(out_edges))
+    traffic = _rates_to_traffic(groups, rates, _dsts_of(out_edges))
+    if injector:
+        g = len(groups)
+        ext = np.zeros((g + 1, g + 1))
+        ext[:g, :g] = traffic
+        ev_rate = np.count_nonzero(np.asarray(raster)) / max(nt, 1)
+        for gi, grp in enumerate(groups):
+            if grp.layer == 0:
+                ext[g, gi] = ev_rate  # CPU -> input tiles: injection stores
+            if grp.layer == len(layers) - 1:
+                ext[gi, g] += grp.n_rows / max(nt, 1)  # counts DMA back
+        traffic = ext
+    return rates, traffic
 
 
 def measure_traffic(states, meta):
@@ -407,11 +430,15 @@ def _rates_to_traffic(groups, rates, edge_dsts_map):
 # builder
 
 
-def _default_placement(groups, descs):
-    """First-fit of groups (in chain order) onto segment slot capacity."""
+def _default_placement(groups, descs, reserved=None):
+    """First-fit of groups (in chain order) onto segment slot capacity.
+
+    ``reserved``: {segment: n_slots} already taken at the *front* of that
+    segment's slot range (hybrid platforms reserve dense-mode units there);
+    spike groups are placed after them."""
     caps = [d.n_cims for d in descs]
     base = np.concatenate([[0], np.cumsum(caps)])
-    used = [0] * len(descs)
+    used = [int((reserved or {}).get(s, 0)) for s in range(len(descs))]
     placement = []
     for g in groups:
         for s in range(len(descs)):
@@ -427,56 +454,55 @@ def _default_placement(groups, descs):
     return placement
 
 
-def build_snn(layers, descs, raster, *, edges=(), n_ticks: int | None = None,
-              placement=None, tick_period: int = 10_000,
-              channel_latency: int = 10_000, local_latency: int = 64,
-              use_kernel: bool = False, in_cap: int | None = None,
-              out_cap: int | None = None):
-    """Assemble a runnable SNN simulation.
+def _unit_tables(descs):
+    """Global unit id -> (segment, slot) tables, walking descriptors in
+    order — the numbering every builder and placement shares."""
+    cim_seg, cim_slot = [], []
+    for s, d in enumerate(descs):
+        for k in range(d.n_cims):
+            cim_seg.append(s)
+            cim_slot.append(k)
+    return cim_seg, cim_slot
 
-    layers: [SNNLayer, ...] feed-forward chain (possibly with ``lateral``
-        synapses); layers wider than one crossbar — in either dimension,
-        counting every in-edge's columns — are tiled into stripe groups
-        (see ``layer_groups``)
-    edges: (RecurrentEdge, ...) backward projections (dst <= src)
-    n_ticks: tick horizon — every unit runs exactly ``n_ticks`` LIF ticks
-        (``tick_limit``), matching the cycle-aware oracle's bounded window.
-        Mandatory for cyclic connectivity (lateral or recurrent edges:
-        activity can self-sustain, so an unbounded run may never
-        terminate); optional for feed-forward chains (None = unlimited,
-        the network drains by itself).
-    descs: segment descriptors (segmentation_for / auto_segmentation_for)
-    placement: group index -> first global CIM unit id; a group's ``width``
-        units occupy consecutive slots of one segment (default: first-fit
-        in chain order; auto_segmentation_for returns the balanced map).
-        For single-crossbar layers this is the familiar layer -> unit list.
-    raster: int (T, n_in) input spike counts; timestep k is integrated at
-        layer 0's tick k (injected as pre-scheduled AER events)
-    in_cap/out_cap: channel-box capacities (see ``segmentation.build``) —
-        the inbox must hold the pre-scheduled raster events of its busiest
-        segment in half its capacity; event-driven runs with short rasters
-        can shrink both dramatically (the caps are the per-round cost on a
-        CPU-free platform, and undersizing raises loudly)
-    Returns (cfg, states, pending, meta) ready for the Controller; meta
-    locates the output units for spike-count readback.
-    """
-    assert tick_period >= channel_latency >= local_latency, \
-        "spike delivery must land within one tick under any placement"
+
+def _snn_meta(layers, groups, placement, by_layer, out_edges, n_ticks,
+              cim_seg, cim_slot):
+    """The readback map shared by every SNN-carrying platform:
+    ``output_spike_counts`` / ``measure_traffic`` consume these keys, so
+    pure-SNN and hybrid builds must emit the identical contract."""
     n_layers = len(layers)
-    for i in range(1, n_layers):
-        assert layers[i].n_in == layers[i - 1].n_out, "layer chain mismatch"
-    in_edges, out_edges, eff_n_in = connectivity(layers, edges)
-    if n_ticks is None:
-        assert not _cyclic(in_edges), (
-            "cyclic connectivity (lateral or recurrent edges) can "
-            "self-sustain: pass n_ticks to bound the run — the oracle "
-            "(snn.oracle_run) takes the same horizon")
-    else:
-        assert n_ticks >= 1, "n_ticks must be >= 1"
-        assert len(raster) <= n_ticks, (
-            f"raster has {len(raster)} timesteps but the tick horizon is "
-            f"{n_ticks}: later input would silently never integrate")
-    groups = _tile(layers, eff_n_in)
+    unit_at = lambda gi, t=0: (cim_seg[placement[gi] + t],
+                               cim_slot[placement[gi] + t])
+    return {
+        "in_unit": unit_at(by_layer[0][0]),
+        "out_unit": unit_at(by_layer[n_layers - 1][0]),
+        "n_out": layers[-1].n_out,
+        "n_ticks": n_ticks,
+        "edge_dsts": _dsts_of(out_edges),
+        "out_groups": [
+            (*unit_at(gi), groups[gi].r0, groups[gi].r1)
+            for gi in by_layer[n_layers - 1]
+        ],
+        "unit_of_layer": [unit_at(by_layer[l][0]) for l in range(n_layers)],
+        "groups": [
+            {"group": groups[gi],
+             "units": [unit_at(gi, t) for t in range(groups[gi].width)]}
+            for gi in range(len(groups))
+        ],
+    }
+
+
+def _wire_spike_units(layers, groups, placement, in_edges, out_edges,
+                      cim_seg, cim_slot, tick_period, n_ticks):
+    """Crossbar images + per-slot spike-mode presets for placed stripe
+    groups — the single source of AER wiring, shared by ``build_snn`` and
+    ``build_hybrid`` so pure-SNN and hybrid platforms wire bit-identically.
+
+    Returns ``(crossbars, cim_init, placement, by_layer)`` keyed by global
+    unit id; ``cim_seg``/``cim_slot`` are the platform's full unit tables
+    (hybrid platforms interleave dense units — spike groups simply occupy
+    the placement's slot runs, wherever they sit)."""
+    n_layers = len(layers)
     by_layer = {}
     for gi, g in enumerate(groups):
         by_layer.setdefault(g.layer, []).append(gi)
@@ -486,16 +512,6 @@ def build_snn(layers, descs, raster, *, edges=(), n_ticks: int | None = None,
         np.concatenate([w for _, w, _ in in_edges[l]], axis=1)
         for l in range(n_layers)
     ]
-
-    cim_seg, cim_slot = [], []
-    for s, d in enumerate(descs):
-        for k in range(d.n_cims):
-            cim_seg.append(s)
-            cim_slot.append(k)
-    n_units = sum(g.width for g in groups)
-    assert len(cim_seg) >= n_units, "not enough CIM units for the layers"
-    if placement is None:
-        placement = _default_placement(groups, descs)
     placement = list(placement)
     assert len(placement) == len(groups), \
         "placement maps stripe groups (layer_groups order) to first unit ids"
@@ -558,6 +574,68 @@ def build_snn(layers, descs, raster, *, edges=(), n_ticks: int | None = None,
                 "row_lo": np.array([e[3] for e in ent] + [0] * pad, np.int32),
                 "row_hi": np.array([e[4] for e in ent] + [0] * pad, np.int32),
             }
+    return crossbars, cim_init, placement, by_layer
+
+
+def build_snn(layers, descs, raster, *, edges=(), n_ticks: int | None = None,
+              placement=None, tick_period: int = 10_000,
+              channel_latency: int = 10_000, local_latency: int = 64,
+              use_kernel: bool = False, in_cap: int | None = None,
+              out_cap: int | None = None):
+    """Assemble a runnable SNN simulation.
+
+    layers: [SNNLayer, ...] feed-forward chain (possibly with ``lateral``
+        synapses); layers wider than one crossbar — in either dimension,
+        counting every in-edge's columns — are tiled into stripe groups
+        (see ``layer_groups``)
+    edges: (RecurrentEdge, ...) backward projections (dst <= src)
+    n_ticks: tick horizon — every unit runs exactly ``n_ticks`` LIF ticks
+        (``tick_limit``), matching the cycle-aware oracle's bounded window.
+        Mandatory for cyclic connectivity (lateral or recurrent edges:
+        activity can self-sustain, so an unbounded run may never
+        terminate); optional for feed-forward chains (None = unlimited,
+        the network drains by itself).
+    descs: segment descriptors (segmentation_for / auto_segmentation_for)
+    placement: group index -> first global CIM unit id; a group's ``width``
+        units occupy consecutive slots of one segment (default: first-fit
+        in chain order; auto_segmentation_for returns the balanced map).
+        For single-crossbar layers this is the familiar layer -> unit list.
+    raster: int (T, n_in) input spike counts; timestep k is integrated at
+        layer 0's tick k (injected as pre-scheduled AER events)
+    in_cap/out_cap: channel-box capacities (see ``segmentation.build``) —
+        the inbox must hold the pre-scheduled raster events of its busiest
+        segment in half its capacity; event-driven runs with short rasters
+        can shrink both dramatically (the caps are the per-round cost on a
+        CPU-free platform, and undersizing raises loudly)
+    Returns (cfg, states, pending, meta) ready for the Controller; meta
+    locates the output units for spike-count readback.
+    """
+    assert tick_period >= channel_latency >= local_latency, \
+        "spike delivery must land within one tick under any placement"
+    n_layers = len(layers)
+    for i in range(1, n_layers):
+        assert layers[i].n_in == layers[i - 1].n_out, "layer chain mismatch"
+    in_edges, out_edges, eff_n_in = connectivity(layers, edges)
+    if n_ticks is None:
+        assert not _cyclic(in_edges), (
+            "cyclic connectivity (lateral or recurrent edges) can "
+            "self-sustain: pass n_ticks to bound the run — the oracle "
+            "(snn.oracle_run) takes the same horizon")
+    else:
+        assert n_ticks >= 1, "n_ticks must be >= 1"
+        assert len(raster) <= n_ticks, (
+            f"raster has {len(raster)} timesteps but the tick horizon is "
+            f"{n_ticks}: later input would silently never integrate")
+    groups = _tile(layers, eff_n_in)
+
+    cim_seg, cim_slot = _unit_tables(descs)
+    n_units = sum(g.width for g in groups)
+    assert len(cim_seg) >= n_units, "not enough CIM units for the layers"
+    if placement is None:
+        placement = _default_placement(groups, descs)
+    crossbars, cim_init, placement, by_layer = _wire_spike_units(
+        layers, groups, placement, in_edges, out_edges, cim_seg, cim_slot,
+        tick_period, n_ticks)
     cfg, states, pending = sg.build(
         descs, crossbars=crossbars, cim_init=cim_init,
         channel_latency=channel_latency, local_latency=local_latency,
@@ -570,25 +648,8 @@ def build_snn(layers, descs, raster, *, edges=(), n_ticks: int | None = None,
     ]
     pending = _inject_raster(pending, cfg.n_segments, in_tiles, raster,
                              tick_period)
-    unit_at = lambda gi, t=0: (cim_seg[placement[gi] + t],
-                               cim_slot[placement[gi] + t])
-    meta = {
-        "in_unit": in_tiles[0][0],
-        "out_unit": unit_at(by_layer[n_layers - 1][0]),
-        "n_out": layers[-1].n_out,
-        "n_ticks": n_ticks,
-        "edge_dsts": _dsts_of(out_edges),
-        "out_groups": [
-            (*unit_at(gi), groups[gi].r0, groups[gi].r1)
-            for gi in by_layer[n_layers - 1]
-        ],
-        "unit_of_layer": [unit_at(by_layer[l][0]) for l in range(n_layers)],
-        "groups": [
-            {"group": groups[gi],
-             "units": [unit_at(gi, t) for t in range(groups[gi].width)]}
-            for gi in range(len(groups))
-        ],
-    }
+    meta = _snn_meta(layers, groups, placement, by_layer, out_edges, n_ticks,
+                     cim_seg, cim_slot)
     return cfg, states, pending, meta
 
 
@@ -645,6 +706,156 @@ def _inject_raster(pending, n_segments, in_tiles, raster, tick_period):
     out["count"] = jnp.asarray(count)
     out["max_count"] = jnp.asarray(count)
     return jax.tree.map(lambda a, b: b, pending, out)
+
+
+def build_hybrid(job, strategy: str = "split", *, tick_period: int | None = None,
+                 channel_latency: int = 10_000, local_latency: int = 64,
+                 use_kernel: bool = False, in_cap: int | None = None,
+                 out_cap: int | None = None, store_log: int | None = None):
+    """Assemble the paper's headline co-simulation scenario: live RISC-V
+    CPUs, dense-mode CIM units, and spike-mode CIM units in ONE platform.
+
+    Segment 0's CPU drives the dense VMM offload over its two dense units
+    (the familiar software-pipelined pair, ``vp.workloads.cim_workload``);
+    a second CPU concurrently injects the SNN raster through tick-addressed
+    ``CIM_REG_SPIKE`` stores, requests the output layer's spike counts back
+    via ``CIM_REG_COUNTS`` once the tick horizon is reached, and copies
+    them to shared DRAM (``vp.workloads.spike_driver_program``).  Both jobs
+    share the same decoupled channels and quantum loop; the SNN side stays
+    bit-identical to the pre-scheduled-raster path because injected spikes
+    carry the same tick-grid ``t_avail`` as raster events.
+
+    ``job``: a ``snn.hybrid_job(...)`` bundle (dense layer + SNNJob with an
+    explicit ``n_ticks`` horizon + oracle expectations for both).
+
+    strategy:
+      split  — spike units in their own segments ({CPU0, DRAM, 2 dense},
+               {CPU1}, up to 2 spike-unit segments) — Fig. 4b-style;
+      packed — spike units co-located with the driver CPU (2 segments);
+      auto   — CPU<->CIM MMIO traffic enters the placement cut: the
+               profiling pass (``profile_traffic(injector=True)``) costs
+               the injection and readback streams, ``traffic_partition``
+               pins the injector pseudo-group to the driver CPU's segment,
+               and spike groups pack to minimize cross-segment events.
+
+    Returns (cfg, states, pending, meta).  ``meta`` carries the standard
+    SNN readback map (``output_spike_counts`` works on it) plus ``o_word``
+    and ``counts_word`` — where the dense result and the CPU-published
+    spike counts sit in shared DRAM (``hybrid_results``).
+    """
+    from repro.vp import workloads as vwl
+
+    layers, raster, edges = job.snn.layers, job.snn.raster, job.snn.edges
+    n_layers = len(layers)
+    n_ticks = job.snn.n_ticks
+    assert n_ticks is not None, \
+        "hybrid jobs need an explicit tick horizon (the readback target)"
+    assert len(raster) <= n_ticks, "raster outlives the tick horizon"
+    in_edges, out_edges, eff_n_in = connectivity(layers, edges)
+    groups = _tile(layers, eff_n_in)
+    widths = [g.width for g in groups]
+    n_snn = sum(widths)
+    in_gis = [gi for gi, g in enumerate(groups) if g.layer == 0]
+    out_gis = [gi for gi, g in enumerate(groups) if g.layer == n_layers - 1]
+    assert len(in_gis) == 1 and groups[in_gis[0]].width == 1, \
+        "the spike driver targets one input tile: keep layer 0 in one crossbar"
+    assert len(out_gis) == 1, \
+        "the readback loop reads one output stripe: keep n_out <= 256"
+
+    events = vwl.spike_events(raster)
+    assert len(events) <= pf.SCRATCH_WORDS - vwl.EV_TABLE, \
+        "event table overflows the driver CPU's scratch: thin the raster"
+    if tick_period is None:
+        # the injection deadline contract sizes the tick pitch: every tick-k
+        # store must retire before (k+1)*period, and the driver injects the
+        # whole table head-of-program, so one period covering the full loop
+        # bounds every deadline (events are staged in timestep order)
+        tick_period = max(channel_latency,
+                          vwl.injection_cycles_bound(len(events)))
+
+    dense_desc = sg.SegmentDesc(cpu=True, dram=True, n_cims=2, cim_mgr=0)
+    if strategy == "split":
+        caps = [c for c in _chunk_widths(widths, 2) if c]
+        descs = [dense_desc, sg.SegmentDesc(cpu=True)] + [
+            sg.SegmentDesc(n_cims=c, cim_mgr=1) for c in caps]
+        placement = _default_placement(groups, descs, reserved={0: 2})
+    elif strategy == "packed":
+        descs = [dense_desc,
+                 sg.SegmentDesc(cpu=True, n_cims=n_snn, cim_mgr=1)]
+        placement = _default_placement(groups, descs, reserved={0: 2})
+    elif strategy == "auto":
+        _, traffic = profile_traffic(layers, raster, edges=edges,
+                                     n_ticks=n_ticks, injector=True)
+        costs = [float(g.n_rows * eff_n_in[g.layer]) for g in groups]
+        slots = max(max(widths), -(-n_snn // 2))
+        assign = sg.traffic_partition(
+            widths + [0], costs + [0.0], traffic, n_segments=3,
+            slots_per_seg=slots, pinned={len(groups): 0})
+        members = {v: [i for i in range(len(groups)) if assign[i] == v]
+                   for v in range(3)}
+        descs, placement, unit = [dense_desc], [0] * len(groups), 2
+        for v in range(3):  # virtual seg 0 = the driver CPU's segment
+            w = sum(widths[i] for i in members[v])
+            if v == 0:
+                descs.append(sg.SegmentDesc(cpu=True, n_cims=w, cim_mgr=1))
+            elif w:
+                descs.append(sg.SegmentDesc(n_cims=w, cim_mgr=1))
+            for i in members[v]:
+                placement[i] = unit
+                unit += widths[i]
+    else:
+        raise ValueError(strategy)
+
+    cim_seg, cim_slot = _unit_tables(descs)
+    crossbars, cim_init, placement, by_layer = _wire_spike_units(
+        layers, groups, placement, in_edges, out_edges, cim_seg, cim_slot,
+        tick_period, n_ticks)
+    assert 0 not in crossbars and 1 not in crossbars, \
+        "spike groups spilled into the reserved dense slots"
+
+    ords = sg.mailbox_ordinals(descs)
+    dense = vwl.cim_workload(job.dense, mgr_segments=[0],
+                             cim_ids_per_mgr={0: (0, 1)}, seed=job.seed,
+                             ordinals=ords)
+    in_gid = placement[in_gis[0]]
+    out_gid = placement[out_gis[0]]
+    out_ord = ords[out_gid]
+    assert sg.OUT0 + (out_ord + 1) * 256 <= vwl.EV_TABLE, \
+        "output unit's mailbox OUT area would collide with the event table"
+    counts_word = dense["o_word"] + job.dense.h * job.dense.p
+    programs = dict(dense["programs"])
+    programs[1] = vwl.spike_driver_program(
+        sg.cim_global_base(in_gid), sg.cim_global_base(out_gid),
+        len(events), n_ticks, layers[-1].n_out, out_ord, counts_word * 4)
+    scratch = {s: dict(v) for s, v in dense["scratch"].items()}
+    scratch.setdefault(1, {})[vwl.EV_TABLE] = events
+
+    cfg, states, pending = sg.build(
+        descs, programs=programs, dram_words=dense["dram"],
+        crossbars={**dense["crossbars"], **crossbars},
+        scratch_init=scratch, cim_init=cim_init,
+        channel_latency=channel_latency, local_latency=local_latency,
+        use_kernel=use_kernel, in_cap=in_cap, out_cap=out_cap,
+        store_log=store_log)
+    meta = {
+        **_snn_meta(layers, groups, placement, by_layer, out_edges, n_ticks,
+                    cim_seg, cim_slot),
+        "o_word": dense["o_word"],
+        "counts_word": counts_word,
+        "dense_shape": (job.dense.h, job.dense.p),
+        "tick_period": tick_period,
+    }
+    return cfg, states, pending, meta
+
+
+def hybrid_results(states, meta):
+    """Both halves of a hybrid run, read from shared DRAM exactly as an
+    external host would: (dense O matrix, CPU-published spike counts)."""
+    h, p = meta["dense_shape"]
+    dram = np.asarray(states["dram"]["data"][0])
+    o = dram[meta["o_word"]: meta["o_word"] + h * p].reshape(h, p)
+    counts = dram[meta["counts_word"]: meta["counts_word"] + meta["n_out"]]
+    return o, counts
 
 
 def output_spike_counts(states, meta) -> np.ndarray:

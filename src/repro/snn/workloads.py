@@ -164,6 +164,46 @@ def snn_inference_job(layer_sizes=(64, 48, 10), t_steps: int = 12,
     return SNNJob(layers, raster, counts, int(totals.sum()))
 
 
+@dataclasses.dataclass
+class HybridJob:
+    """One platform, two concurrent workloads: a dense VMM offload job and
+    a spiking network whose raster a live RISC-V CPU injects via MMIO
+    (``CIM_REG_SPIKE``) and whose output counts it reads back
+    (``CIM_REG_COUNTS``) — the paper's multicore-host-plus-accelerators
+    co-simulation scenario.  Oracle expectations for both halves ride
+    along; ``snn.build_hybrid(job, strategy)`` assembles the platform."""
+    dense: object  # vp.workloads.Layer
+    dense_expected: np.ndarray  # A @ B for the dense half
+    snn: SNNJob  # layers + raster + oracle counts over an explicit horizon
+    seed: int = 0
+
+
+def hybrid_job(layer_sizes=(32, 24, 10), t_steps: int = 8, rate: float = 0.5,
+               seed: int = 0, dense_layer=None, settle: int = 1) -> HybridJob:
+    """Build the canonical hybrid workload: the conformance dense layer
+    plus a rate-coded feed-forward SNN sized for CPU injection (layer 0 and
+    the output layer each within one crossbar — the driver program targets
+    one input tile and reads one output stripe).
+
+    The tick horizon is explicit (``t_steps + depth + settle`` — with
+    ``settle=1`` exactly the feed-forward oracle's own window), because the
+    driver's count readback is *tick-addressed*: it asks for the counts as
+    of that horizon, which is what makes the DMA'd values a pure function
+    of the tick grid rather than of round timing."""
+    from repro.vp import workloads as vwl
+
+    dense = dense_layer or vwl.Layer("hybrid", "vmm", 8, 8, 4)
+    _, _, o = vwl.layer_data(dense, seed)
+    rng = np.random.default_rng(seed + 1)
+    layers = random_snn(layer_sizes, seed=seed)
+    x = rng.random(layer_sizes[0]) * rate * 2
+    raster = rate_encode(x, t_steps, seed=seed + 2)
+    n_ticks = t_steps + len(layers) + settle
+    counts, totals = oracle_run(layers, raster, n_ticks=n_ticks)
+    snn = SNNJob(layers, raster, counts, int(totals.sum()), n_ticks=n_ticks)
+    return HybridJob(dense, o, snn, seed)
+
+
 def snn_recurrent_job(layer_sizes=(48, 40, 12), t_steps: int = 10,
                       rate: float = 0.5, seed: int = 0,
                       settle: int = 6) -> SNNJob:

@@ -95,6 +95,14 @@ def cim_state(n_slots: int, snn_fanout: int = 1):
         "spike_counts": z(n_slots, XBAR),  # emitted spikes per neuron
         "spikes_total": z(n_slots),
         "ticks": z(n_slots),
+        # pending spike-count readback request (CIM_REG_COUNTS): the target
+        # tick count, or -1 for none.  Served at the quantum boundary once
+        # ``ticks`` reaches the target (or the unit can never tick again) by
+        # DMA-ing spike_counts to the manager mailbox — the spiking analogue
+        # of dense OUT-phase writeback (vp/platform.py).  A pending request
+        # keeps the unit busy for the termination reducer, so a simulation
+        # never ends with an unanswered readback.
+        "count_req": jnp.full((n_slots,), -1, jnp.int32),
     }
 
 

@@ -63,6 +63,27 @@ CIM_REG_MODE = 0x1C  # write: {mode[0], thresh[16:1], leak[24:17], refrac[28:25]
                      # scheduling + spike routing (tick_period, dst_*) are
                      # build-time wiring like mgr_seg (segmentation cim_init),
                      # and spikes sent to a unit that never ticks are dropped.
+CIM_REG_SPIKE = 0x20  # write: {tick[30:16], axon[15:0]} — inject ONE AER spike
+                      # addressed to the unit's LIF tick ``tick`` (the raster
+                      # timestep grid: integrated exactly like a pre-scheduled
+                      # raster event of timestep ``tick``).  The store does NOT
+                      # become a register write: the platform turns it into a
+                      # MSG_SPIKE whose t_avail is the tick's grid time, so
+                      # CPU-injected spikes ride the tick-bucketed AER
+                      # machinery bit-identically under every placement.
+                      # Contract: the store must execute at CPU local time
+                      # < (tick + 1) * tick_period — later injections are
+                      # timing-dependent and trip the loud ``snn_mmio_late``
+                      # watermark (vp/platform.py).
+CIM_REG_COUNTS = 0x24  # write: request a spike-count readback *as of tick
+                       # ``value``* (number of completed LIF ticks).  The unit
+                       # serves the request at the first quantum boundary where
+                       # its tick counter has reached the target (or it can
+                       # never tick again), DMA-ing spike_counts[0:rows] to its
+                       # manager's scratch OUT area and writing 1 to its flag
+                       # word — the same mailbox protocol as dense completion.
+                       # A request the unit has already ticked past is
+                       # timing-dependent and trips ``snn_mmio_late``.
 
 CIM_ST_IDLE, CIM_ST_IN, CIM_ST_OP, CIM_ST_OUT = 0, 1, 2, 3
 
@@ -72,6 +93,12 @@ CIM_MODE_DENSE, CIM_MODE_SPIKE = 0, 1
 def pack_mode(mode: int, thresh: int = 1, leak: int = 0, refrac: int = 0) -> int:
     """Encode a CIM_REG_MODE register value."""
     return (mode & 1) | (thresh & 0xFFFF) << 1 | (leak & 0xFF) << 17 | (refrac & 0xF) << 25
+
+
+def pack_spike(tick: int, axon: int) -> int:
+    """Encode a CIM_REG_SPIKE store value: one spike for LIF tick ``tick``
+    (raster-timestep grid) at crossbar axon ``axon``."""
+    return (tick & 0x7FFF) << 16 | (axon & 0xFFFF)
 
 
 def reg(name: str) -> int:

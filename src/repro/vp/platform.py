@@ -15,7 +15,11 @@ Flow per quantum (paper Fig. 2/3):
      decoupling bound);
   3. quantum-boundary CIM completion: every unit whose OP finished computes
      its crossbar VMM (batched) and DMAs outputs + a done-flag to its
-     manager segment's scratch via channel messages.
+     manager segment's scratch via channel messages;
+  4. quantum-boundary SNN work (spike-mode units): the LIF tick when due,
+     then service of pending spike-count readbacks (CIM_REG_COUNTS) over
+     the same manager-mailbox DMA protocol — hybrid jobs' CPUs poll the
+     flag word exactly like dense completions.
 """
 from __future__ import annotations
 
@@ -69,6 +73,16 @@ class VPConfig:
                          # shards); sized by the builder from the wiring
     snn_grouped: bool = False  # any multi-crossbar column group wired; gates
                                # the tick-time charge reduction (cim.snn_tick)
+    snn_tick_period: int = 0  # the platform's global LIF tick pitch (0 = no
+                              # ticking spike-mode unit wired).  Static wiring
+                              # like cim_seg: the builder asserts every ticking
+                              # unit shares it, because CPU spike injection
+                              # (CIM_REG_SPIKE) is *tick-addressed* — the store
+                              # names a tick k and the platform pins the
+                              # resulting MSG_SPIKE's t_avail to the grid time
+                              # (k+1)*period, making injected spikes land in
+                              # the same bucket as pre-scheduled raster events
+                              # under every placement, backend, and quantum.
     # static wiring: global cim id -> (segment, slot); manager cpu segment
     cim_seg: tuple = ()
     cim_slot: tuple = ()
@@ -98,6 +112,13 @@ def segment_state(cfg: VPConfig):
             "msgs": jnp.zeros((), jnp.int32),
             "outbox_peak": jnp.zeros((), jnp.int32),  # overflow sentinel
             "store_peak": jnp.zeros((), jnp.int32),  # store-log sentinel
+            # sticky count of hybrid MMIO ops that violated their tick-grid
+            # deadline: a CIM_REG_SPIKE store executed at/after its target
+            # tick's grid time, or a CIM_REG_COUNTS readback served after the
+            # unit had ticked past the requested count.  Either is
+            # timing-dependent (round/quantum-sensitive), so the controller
+            # raises loudly instead of returning placement-dependent results.
+            "snn_mmio_late": jnp.zeros((), jnp.int32),
             "txn_hist": jnp.zeros((8,), jnp.int32),  # Fig. 1a trace histogram
         },
     }
@@ -179,6 +200,14 @@ def _apply_inbox(cfg: VPConfig, st, pending):
             # one inbox round, same resolution rule as CIM_REG_CONFIG above)
             mmd = mu & (reg == isa.CIM_REG_MODE)
             cims = _maybe_mode(cims, u, mmd.any(), jnp.max(jnp.where(mmd, data, 0)))
+            # COUNTS: arm a spike-count readback as of tick ``data`` (largest
+            # target wins within one round); served at the quantum boundary
+            if cfg.has_snn:
+                mqr = mu & (reg == isa.CIM_REG_COUNTS)
+                cims["count_req"] = cims["count_req"].at[u].set(
+                    jnp.where(mqr.any(), jnp.max(jnp.where(mqr, data, 0)),
+                              cims["count_req"][u])
+                )
 
     # --- AER spikes: accumulate into each spike-mode unit's tick buffer ---
     spk_applied = jnp.zeros_like(m)
@@ -351,8 +380,37 @@ def _mem_access(cfg: VPConfig, hot, dram_data, outbox, mem):
         reg_off = addr & 0xFFF
         seg_arr = jnp.asarray(cfg.cim_seg, jnp.int32)
         slot_arr = jnp.asarray(cfg.cim_slot, jnp.int32)
+        cim_store = sd & is_cim
+        is_spk = cim_store & (reg_off == isa.CIM_REG_SPIKE)
+        if cfg.snn_tick_period > 0:
+            # tick-addressed AER injection: the store names a LIF tick, not a
+            # register value, and becomes a MSG_SPIKE whose t_avail is pinned
+            # to the tick's grid time — t_emit backs the routing latency out,
+            # so under ANY placement the event arrives tagged exactly like a
+            # pre-scheduled raster event of the same timestep (bit-identical
+            # tick bucketing; snn/topology.py _inject_raster).
+            tick = (mem["st_data"] >> 16) & 0x7FFF
+            target_t = (tick + 1) * cfg.snn_tick_period
+            lat = jnp.where(seg_arr[u_global] == hot["seg_id"],
+                            cfg.local_latency, cfg.channel_latency)
+            outbox = ch.box_append(
+                outbox, is_spk, ch.MSG_SPIKE, seg_arr[u_global],
+                (slot_arr[u_global] << 16) | (mem["st_data"] & 0xFFFF),
+                jnp.ones((), jnp.int32), target_t - lat,
+            )
+            # deadline contract (docs/architecture.md, "CPU spike injection"):
+            # a tick-k spike must be issued at CPU local time < (k+1)*period —
+            # later stores may or may not beat the receiver's gate, so they
+            # are flagged sticky-loud instead of resolving timing-dependently
+            late = is_spk & (hot["time"] >= target_t)
+        else:
+            late = is_spk  # no ticking spike-mode unit wired: never valid
+        hot["stats"] = dict(hot["stats"])
+        hot["stats"]["snn_mmio_late"] = (
+            hot["stats"]["snn_mmio_late"] + late.astype(jnp.int32)
+        )
         outbox = ch.box_append(
-            outbox, sd & is_cim, ch.MSG_W_CIM, seg_arr[u_global],
+            outbox, cim_store & ~is_spk, ch.MSG_W_CIM, seg_arr[u_global],
             (slot_arr[u_global] << 16) | reg_off, mem["st_data"], hot["time"],
         )
     return hot, outbox, cycles, val, remote_ld
@@ -504,6 +562,46 @@ def make_segment_step(cfg: VPConfig, quantum: int):
                         (cims["dst_slot"][u, d] << 16) | dst_axon,
                         jnp.ones((), jnp.int32), tick_time[u],
                     )
+
+        # --- spike-count readback service (CIM_REG_COUNTS, hybrid jobs) ---
+        # a pending request is served at the first boundary where the unit's
+        # tick counter has reached the target (ticks increment by one per
+        # boundary, so the first crossing is exact) or the unit can never
+        # tick again (horizon exhausted / reconfigured) — either way the
+        # DMA'd counts are a pure function of the tick grid, never of round
+        # timing.  Delivery mirrors dense completion: spike_counts rows to
+        # the manager's OUT area, then 1 to the flag word.
+        if cfg.has_cpu and cfg.has_snn:
+            cims = st["cims"]
+            can_tick = (
+                (cims["mode"] == isa.CIM_MODE_SPIKE) & (cims["tick_period"] > 0)
+                & ((cims["tick_limit"] == 0) | (cims["ticks"] < cims["tick_limit"]))
+            )
+            serve = (
+                cims["present"] & (cims["count_req"] >= 0)
+                & ((cims["ticks"] >= cims["count_req"]) | ~can_tick)
+            )
+            rows = jnp.arange(cim_mod.XBAR)
+            for u in range(cfg.n_cim_slots):
+                mask_rows = serve[u] & (rows < cims["rows"][u])
+                outbox = ch.box_append_bulk(
+                    outbox, mask_rows, ch.MSG_W_SCRATCH, cims["mgr_seg"][u],
+                    cims["out_addr"][u] + rows, cims["spike_counts"][u],
+                    st["time"],
+                )
+                outbox = ch.box_append(
+                    outbox, serve[u], ch.MSG_W_SCRATCH, cims["mgr_seg"][u],
+                    cims["flag_addr"][u], jnp.ones((), jnp.int32), st["time"],
+                )
+            # a request served past its target tick is timing-dependent (the
+            # CPU asked too late): flag it sticky-loud like late injections
+            late_read = serve & (cims["ticks"] > cims["count_req"])
+            st["cims"] = dict(cims)
+            st["cims"]["count_req"] = jnp.where(serve, -1, cims["count_req"])
+            st["stats"] = dict(st["stats"])
+            st["stats"]["snn_mmio_late"] = (
+                st["stats"]["snn_mmio_late"] + late_read.sum().astype(jnp.int32)
+            )
         st["stats"] = dict(st["stats"])
         st["stats"]["msgs"] = st["stats"]["msgs"] + outbox["count"]
         # sticky watermark: past-capacity appends are silently lost (bulk
@@ -523,8 +621,8 @@ def make_segment_step(cfg: VPConfig, quantum: int):
 
 def termination_flags(states, pending, in_cap: int, out_cap: int,
                       store_log: int):
-    """Traced ``(done, inbox_over, outbox_over, store_over)`` over the
-    stacked simulation.
+    """Traced ``(done, inbox_over, outbox_over, store_over, mmio_late)``
+    over the stacked simulation.
 
     This is the controller's termination predicate and overflow watermark
     check as *traced* code, so it runs both host-side (one fused device
@@ -540,13 +638,20 @@ def termination_flags(states, pending, in_cap: int, out_cap: int,
       under a charged membrane; units that never tick can never drain and
       are not busy, and units that exhausted their ``tick_limit`` horizon —
       recurrent nets can self-sustain forever — are done by definition),
-      and no valid pending message.  With an empty buffer and everyone
-      subthreshold, leak alone can never cross threshold (leak >= 0,
-      reset-to-zero), so idling is final.
+      no unit with a pending spike-count readback (``count_req`` — the
+      unit must keep ticking to the requested count and answer before the
+      run may end), and no valid pending message.  With an empty buffer
+      and everyone subthreshold, leak alone can never cross threshold
+      (leak >= 0, reset-to-zero), so idling is final.
     - ``inbox_over`` / ``outbox_over`` / ``store_over``: the sticky
       high-water marks carried in the state ever exceeded in_cap /
       out_cap / store_log (see ``channel.inbox_overflowed``); the
       controller raises host-side with the cap kwarg to fix.
+    - ``mmio_late``: the sticky ``snn_mmio_late`` counter is nonzero — a
+      hybrid MMIO op (CIM_REG_SPIKE / CIM_REG_COUNTS) violated its
+      tick-grid deadline, so its effect would be round-timing-dependent;
+      the controller raises instead of returning placement-dependent
+      results.
     """
     from repro.vp import isa
 
@@ -561,9 +666,11 @@ def termination_flags(states, pending, in_cap: int, out_cap: int,
     pending_in = (cims["in_buf"] != 0).any(-1)
     due = ((cims["v"] >= cims["thresh"][..., None]) & (cims["refrac"] == 0)).any(-1)
     busy_snn = jnp.any(ticking & (pending_in | due))
+    busy_req = jnp.any(cims["present"] & (cims["count_req"] >= 0))
     msgs = jnp.any(pending["valid"])
-    done = ~(active_cpu | busy_cim | busy_snn | msgs)
+    done = ~(active_cpu | busy_cim | busy_snn | busy_req | msgs)
     inbox_over = ch.inbox_overflowed(pending, in_cap)
     outbox_over = (states["stats"]["outbox_peak"] > out_cap).any()
     store_over = (states["stats"]["store_peak"] > store_log).any()
-    return done, inbox_over, outbox_over, store_over
+    mmio_late = (states["stats"]["snn_mmio_late"] > 0).any()
+    return done, inbox_over, outbox_over, store_over, mmio_late

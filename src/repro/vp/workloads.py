@@ -1,6 +1,7 @@
 """Benchmark workloads: the paper's Table III network layers as VMM jobs,
-program generation for both execution modes, and ``from_arch`` tiles that
-map the assigned LM architectures' GEMMs onto 256×256 crossbars.
+program generation for both execution modes, ``from_arch`` tiles that
+map the assigned LM architectures' GEMMs onto 256×256 crossbars, and the
+CPU side of hybrid dense+spiking jobs (the spike driver program).
 
 Modes:
   riscv — nested-loop VMM on the DRAM-resident matrices, run by the CPU
@@ -8,7 +9,13 @@ Modes:
   cim   — offload: each managing CPU drives its two CIM-Units in a
           software-pipelined pair (stream j → unit0, stream j+1 → unit1,
           then drain both); inputs staged in local scratch, outputs DMA'd
-          back by the units, O written to shared DRAM as posted writes.
+          back by the units, O written to shared DRAM as posted writes;
+  hybrid — the above runs concurrently with a spiking network whose input
+          raster a second live CPU injects through tick-addressed
+          CIM_REG_SPIKE stores (``spike_driver_program``), reading the
+          output layer's spike counts back over the dense mailbox protocol
+          (CIM_REG_COUNTS) and publishing them to shared DRAM.  Platform
+          assembly lives in snn/topology.py (``build_hybrid``).
 """
 from __future__ import annotations
 
@@ -223,6 +230,94 @@ def cim_workload(layer: Layer, mgr_segments, cim_ids_per_mgr, seed: int = 0, ord
     }
 
 
+
+
+# ---------------------------------------------------------------------------
+# hybrid dense+spiking: the spike driver CPU's side
+
+# scratch word offset of the staged spike-event table — above the manager
+# mailbox OUT areas (segmentation.OUT0 + ordinal*256, ordinal <= 6), below
+# the scratch top; holds up to SCRATCH_WORDS - EV_TABLE events
+EV_TABLE = 2048
+
+
+def spike_events(raster):
+    """Raster -> CIM_REG_SPIKE store words in timestep order.
+
+    One word per spike, ``isa.pack_spike(timestep, axon)``; the driver
+    program sends one spike per store, so the raster must be 0/1 (which is
+    what ``snn.rate_encode`` produces)."""
+    raster = np.asarray(raster)
+    assert raster.min(initial=0) >= 0 and raster.max(initial=0) <= 1, \
+        "CPU spike injection sends one spike per store: raster must be 0/1"
+    ts, axons = np.nonzero(raster)  # row-major: timestep order, the contract
+    assert len(ts) == 0 or (ts.max() < (1 << 15) and axons.max() < (1 << 16))
+    return np.array([isa.pack_spike(int(t), int(a)) for t, a in zip(ts, axons)],
+                    np.int32)
+
+
+def injection_cycles_bound(n_events: int) -> int:
+    """Conservative upper bound on the driver program's injection-loop
+    cycles from t=0 (loop body: scratch load, MMIO post, two addi, branch —
+    ~7 cycles plus icache-miss amortization; 16 is generous).
+    ``build_hybrid`` sizes ``tick_period`` with this so every tick-k store
+    retires before (k+1)*tick_period — the CIM_REG_SPIKE deadline contract,
+    policed at runtime by the ``snn_mmio_late`` watermark."""
+    return 64 + 16 * n_events
+
+
+def spike_driver_program(in_base, out_base, n_events, n_ticks, n_out,
+                         out_ordinal, counts_base):
+    """The hybrid job's spike-side CPU program (the paper's host control
+    path next to the accelerators):
+
+    1. stream the staged event table (scratch, ``EV_TABLE``) into the input
+       unit's ``CIM_REG_SPIKE`` — tick-addressed AER injection, concurrent
+       with whatever the dense managers are doing;
+    2. request the output unit's spike counts as of tick ``n_ticks``
+       (``CIM_REG_COUNTS``) and poll the mailbox flag, exactly like a dense
+       manager polls an OP completion;
+    3. copy the DMA'd counts from scratch to shared DRAM at ``counts_base``
+       (posted remote writes), then halt.
+    """
+    sb = isa.SCRATCH_BASE
+    flag = out_ordinal * 4
+    out_area = sb + (seg.OUT0 + out_ordinal * 256) * 4
+    src = [
+        f"    li s0, {in_base}",
+        f"    li s1, {sb + EV_TABLE * 4}",
+        f"    li s2, {n_events}",
+        "    li s3, 0",
+        "    beq s2, zero, req",
+        "inj:",
+        "    lw t1, 0(s1)",
+        f"    sw t1, {isa.CIM_REG_SPIKE}(s0)",
+        "    addi s1, s1, 4",
+        "    addi s3, s3, 1",
+        "    blt s3, s2, inj",
+        "req:",
+        f"    li t0, {sb}",
+        f"    sw zero, {flag}(t0)",
+        f"    li s4, {out_base}",
+        f"    li t1, {n_ticks}",
+        f"    sw t1, {isa.CIM_REG_COUNTS}(s4)",
+        "poll:",
+        f"    lw t1, {flag}(t0)",
+        "    beq t1, zero, poll",
+        f"    li s1, {out_area}",
+        f"    li s2, {counts_base}",
+        "    li s3, 0",
+        f"    li t2, {n_out}",
+        "copy:",
+        "    lw t1, 0(s1)",
+        "    sw t1, 0(s2)",
+        "    addi s1, s1, 4",
+        "    addi s2, s2, 4",
+        "    addi s3, s3, 1",
+        "    blt s3, t2, copy",
+        "    halt",
+    ]
+    return "\n".join(src)
 
 
 def from_arch(arch: str, max_tiles: int = 8):

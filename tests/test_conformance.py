@@ -1,12 +1,13 @@
 """Cross-backend conformance: the canonical bit-exactness gate.
 
 One parametrized sweep asserts that a dense CIM offload job, a
-feed-forward SNN job, and a recurrent SNN job produce *bit-identical*
-final states, pending boxes, and round counts across every controller
-backend (sequential / threads / vmap, per-round and megaloop dispatch;
-shard_map rides in a multi-device subprocess) for each segmentation
-strategy and quantum — and that every cell of the sweep reproduces the
-workload's oracle expectation exactly.  The older per-feature equivalence
+feed-forward SNN job, a recurrent SNN job, and a hybrid job (dense VMM +
+spiking layers + two live RISC-V CPUs, the SNN raster injected over MMIO)
+produce *bit-identical* final states, pending boxes, and round counts
+across every controller backend (sequential / threads / vmap, per-round
+and megaloop dispatch; shard_map rides in a multi-device subprocess) for
+each segmentation strategy and quantum — and that every cell of the sweep
+reproduces the workload's oracle expectation exactly.  The older per-feature equivalence
 checks (tests/test_snn.py, tests/test_snn_wide.py, tests/test_megaloop.py)
 stay as focused diagnostics; this sweep is the gate new execution paths
 must pass.
@@ -46,6 +47,7 @@ except ImportError:
 DENSE_LAYER = wl.Layer("conf", "t", 8, 8, 4)
 FF_JOB = snn.snn_inference_job((32, 24, 10), t_steps=8, rate=0.5, seed=2)
 REC_JOB = snn.snn_recurrent_job((32, 24, 8), t_steps=8, rate=0.5, seed=2)
+HYBRID_JOB = snn.hybrid_job((16, 12, 8), t_steps=6, rate=0.5, seed=2)
 
 
 def build_dense(strategy):
@@ -87,6 +89,28 @@ def build_snn_job(job, strategy):
     return (cfg, states, pending), check
 
 
+def build_hybrid_job(strategy):
+    """Live CPUs + dense units + spike units in one platform: CPU1 injects
+    the raster via CIM_REG_SPIKE, reads counts back via CIM_REG_COUNTS and
+    publishes them to shared DRAM while CPU0 runs the dense offload."""
+    job = HYBRID_JOB
+    # the dense/SNN strategy names map onto the hybrid platform shapes
+    hs = {"uniform": "packed", "load_oriented": "split"}.get(strategy, strategy)
+    cfg, states, pending, meta = snn.build_hybrid(job, hs,
+                                                  channel_latency=2000)
+
+    def check(ctl):
+        st = ctl.result_states()
+        o, counts = snn.hybrid_results(st, meta)
+        np.testing.assert_array_equal(o, job.dense_expected)
+        np.testing.assert_array_equal(counts, job.snn.expected_counts)
+        np.testing.assert_array_equal(snn.output_spike_counts(st, meta),
+                                      job.snn.expected_counts)
+        assert snn.total_spikes(st) == job.snn.expected_total
+
+    return (cfg, states, pending), check
+
+
 def build_sim(kind, strategy):
     if kind == "dense":
         return build_dense(strategy)
@@ -94,6 +118,8 @@ def build_sim(kind, strategy):
         return build_snn_job(FF_JOB, strategy)
     if kind == "snn_recurrent":
         return build_snn_job(REC_JOB, strategy)
+    if kind == "hybrid":
+        return build_hybrid_job(strategy)
     raise ValueError(kind)
 
 
@@ -135,6 +161,11 @@ SWEEP = [
     ("snn_ff", "load_oriented", 32),
     ("snn_recurrent", "uniform", 16), ("snn_recurrent", "uniform", 64),
     ("snn_recurrent", "load_oriented", 32),
+    # hybrid: dense VMM + SNN + two live CPUs in one platform, raster
+    # CPU-injected — ≥2 segmentations x ≥2 quanta (the PR-5 gate)
+    ("hybrid", "split", 400), ("hybrid", "split", 1000),
+    ("hybrid", "packed", 400), ("hybrid", "packed", 1000),
+    ("hybrid", "auto", 700),
 ]
 
 
@@ -203,6 +234,12 @@ descs = snn.segmentation_for(rec.layers, "uniform", n_segments=2,
 cfg, states, pending, _ = snn.build_snn(rec.layers, descs, rec.raster,
                                         edges=rec.edges, n_ticks=rec.n_ticks)
 both(cfg, states, pending, 32)
+
+# hybrid: dense + SNN + two live CPUs (packed = 2 segments = 2 devices)
+hy = snn.hybrid_job((16, 12, 8), t_steps=6, rate=0.5, seed=2)
+cfg, states, pending, _ = snn.build_hybrid(hy, "packed",
+                                           channel_latency=2000)
+both(cfg, states, pending, 400)
 print("shard_map conformance OK")
 """,
         n_devices=2,
@@ -213,7 +250,7 @@ if HAVE_HYPOTHESIS:
 
     @settings(max_examples=10, deadline=None)
     @given(
-        kind=st.sampled_from(["dense", "snn_ff", "snn_recurrent"]),
+        kind=st.sampled_from(["dense", "snn_ff", "snn_recurrent", "hybrid"]),
         strategy=st.sampled_from(["uniform", "load_oriented"]),
         backend_fused=st.sampled_from(
             [("threads", None), ("vmap", False), ("vmap", True)]),
@@ -225,7 +262,8 @@ if HAVE_HYPOTHESIS:
         """Random (job, segmentation, backend, quantum, check cadence):
         always bit-identical to the sequential reference at the same
         cadence, and always oracle-exact."""
-        quantum = {"dense": (500, 1000, 2000)}.get(kind, (16, 32, 64))[q_index]
+        quantum = {"dense": (500, 1000, 2000),
+                   "hybrid": (400, 700, 1000)}.get(kind, (16, 32, 64))[q_index]
         sim, check = build_sim(kind, strategy)
         ref, ctl = run_mode(sim, "sequential", quantum, None,
                             check_every=check_every)

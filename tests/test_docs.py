@@ -9,9 +9,24 @@ REPO = Path(__file__).resolve().parents[1]
 
 
 def test_doc_set_exists():
-    for doc in ("README.md", "docs/architecture.md", "docs/snn.md",
-                "benchmarks/README.md"):
+    for doc in ("README.md", "docs/architecture.md", "docs/vp.md",
+                "docs/snn.md", "benchmarks/README.md"):
         assert (REPO / doc).exists(), f"missing {doc}"
+
+
+def test_no_orphaned_doc_pages():
+    """Every checked doc page must be reachable from README.md
+    (check_docs.py rule 5 — exercised directly so a failure names the
+    orphans without rerunning the whole checker)."""
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "scripts" / "check_docs.py")
+    check_docs = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(check_docs)
+    problems = []
+    check_docs.check_reachability(problems)
+    assert not problems, f"orphaned doc pages (link them from README): {problems}"
 
 
 def test_docs_commands_and_links_resolve():
