@@ -24,6 +24,45 @@ for p in (str(_ROOT), str(_ROOT / "src")):
         sys.path.insert(0, p)
 
 
+def provenance() -> dict:
+    """Where this report came from: jax/backend/device/CPU-count/git-SHA.
+
+    Embedded in every ``--json`` report so baselines are comparable across
+    machines — ``--check --baseline OLD.json`` warns (never fails) when two
+    reports were measured on different stacks.
+    """
+    import subprocess
+
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_ROOT, text=True,
+            capture_output=True, timeout=10).stdout.strip() or "unknown"
+    except OSError:
+        sha = "unknown"
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "git_sha": sha,
+    }
+
+
+def provenance_warnings(ours: dict, baseline: dict) -> list:
+    """Human-readable mismatch lines between two provenance dicts."""
+    warns = []
+    for key in sorted(set(ours) | set(baseline)):
+        a, b = baseline.get(key), ours.get(key)
+        if a != b:
+            warns.append(f"provenance mismatch: {key}: "
+                         f"baseline {a!r} vs this run {b!r}")
+    return warns
+
+
 def sections():
     from benchmarks import (
         bench_feature_matrix,
@@ -70,6 +109,12 @@ def main(argv=None) -> None:
                          "verification flag (ok=False / correct=False / "
                          "supported=False) — CI smoke: perf runs cannot "
                          "silently break correctness")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="a previous --json report to compare provenance "
+                         "against; with --check, mismatches (jax version, "
+                         "backend, device kind, CPU count, git SHA) print "
+                         "warnings — numbers from different stacks are not "
+                         "comparable, but this never fails the run")
     args = ap.parse_args(argv)
     if args.full:
         os.environ["REPRO_FULL_BENCH"] = "1"  # before benchmarks.common import
@@ -101,12 +146,19 @@ def main(argv=None) -> None:
                        "seconds": round(time.time() - t1, 3)}
     total = time.time() - t0
     print(f"# total bench time: {total:.1f}s")
+    prov = provenance()
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"sections": report, "total_seconds": round(total, 3),
-                       "full": bool(os.environ.get("REPRO_FULL_BENCH") == "1")},
+                       "full": bool(os.environ.get("REPRO_FULL_BENCH") == "1"),
+                       "provenance": prov},
                       f, indent=2)
         print(f"# json report -> {args.json}")
+    if args.baseline and args.check:
+        with open(args.baseline) as f:
+            base_prov = json.load(f).get("provenance", {})
+        for w in provenance_warnings(prov, base_prov):
+            print(f"# WARNING: {w}", file=sys.stderr)
     if args.check:
         bad = [line for sec in report.values() for line in sec["lines"]
                if any(flag in line for flag in

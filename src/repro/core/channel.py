@@ -164,6 +164,11 @@ def merge_pending(pending, fresh):
     out["valid"] = packed["valid"] | from_fresh
     out["count"] = base + fresh["valid"].sum().astype(jnp.int32)
     out["max_count"] = jnp.maximum(pending["max_count"], base + fresh["count"])
+    # routed-traffic counter (obs/metrics.py): total messages ever routed
+    # toward this segment — fresh["count"] carries true route demand, so
+    # the counter is exact even when the merge truncates (which trips the
+    # max_count watermark anyway).  pack_pending dropped the field.
+    out["routed_total"] = pending["routed_total"] + fresh["count"]
     return out
 
 
@@ -188,6 +193,7 @@ def empty_pending(cap: int):
     box["valid"] = jnp.zeros((cap,), jnp.bool_)
     box["count"] = jnp.zeros((), jnp.int32)
     box["max_count"] = jnp.zeros((), jnp.int32)
+    box["routed_total"] = jnp.zeros((), jnp.int32)  # lifetime routed msgs
     return box
 
 

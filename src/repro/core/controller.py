@@ -45,11 +45,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import channel as ch
+from repro.obs import trace as obs_trace
 from repro.vp import platform as pf
 
 
-_FN_CACHE: dict = {}  # (cfg, quantum, kind) -> compiled fns; benchmarks
+_FN_CACHE: dict = {}  # (cfg, quantum, s, obs) -> compiled fns; benchmarks
                       # rebuild controllers per workload with identical shapes
+
+# the single host-transfer primitive for dispatch-boundary syncs: every
+# fused-dispatch fetch (round count + flags + telemetry ring) goes through
+# one call to this, so tests can monkeypatch it to count device syncs and
+# prove the one-sync-per-dispatch contract (tests/test_conformance.py)
+_HOST_FETCH = jax.device_get
 
 
 @dataclasses.dataclass
@@ -61,12 +68,28 @@ class Controller:
     quantum: int = 10_000
     mesh: object = None  # shard_map backend only
     rounds_run: int = 0
+    obs: object = None  # obs.trace.TraceConfig, or None = tracing compiled out
 
     def __post_init__(self):
         # own the state: round fns donate their inputs, so the caller's
         # arrays must not be shared with this controller
         self.states = jax.tree.map(jnp.copy, self.states)
         self.pending = jax.tree.map(jnp.copy, self.pending)
+        # telemetry (obs/): attach one trace ring per segment INSIDE the
+        # state pytree, so the megaloop carries it and the step appends to
+        # it in traced code; host-side bookkeeping for drained batches.
+        # Attached before the list-mode split so every backend carries it.
+        self.dispatches = 0      # fused megaloop dispatches issued
+        self.dispatch_syncs = 0  # _HOST_FETCH calls from the fused loop
+        self.trace_lost = 0      # events dropped to ring capacity
+        self._events = []        # drained batches (np structured arrays)
+        if self.obs is not None and "trace" not in self.states:
+            cap = int(self.obs.capacity)
+            self.states = {
+                **self.states,
+                "trace": jax.vmap(lambda _: obs_trace.ring_state(cap))(
+                    jnp.arange(self.cfg.n_segments)),
+            }
         # the CPU-free fast path (VPConfig.has_cpu=False: no slot scan, no
         # MMIO inbox handling, no dense completion) is only valid while
         # nothing but AER spikes can circulate.  The builder guarantees that
@@ -98,7 +121,7 @@ class Controller:
                                   thread_name_prefix="vp-seg")
             if self.backend == "threads" else None
         )
-        step = pf.make_segment_step(self.cfg, self.quantum)
+        step = pf.make_segment_step(self.cfg, self.quantum, self.obs)
         s = self.cfg.n_segments
         big = jnp.int32(2**30)
         # locals, NOT self.*, inside the jitted closures below: _FN_CACHE
@@ -149,9 +172,12 @@ class Controller:
                     at_check = ((r0 + i) % check_every) == 0
 
                     def checked(_):
-                        done, in_over, out_over, st_over, late = \
+                        done, in_over, out_over, st_over, late, _tr = \
                             pf.termination_flags(
                                 st, pen, cfg.in_cap, cfg.out_cap, cfg.store_log)
+                        # the trace-overflow flag (6) is informational and
+                        # never stops the loop: telemetry loss must not
+                        # change termination behavior (obs/trace.py)
                         over = in_over | out_over | st_over | late
                         return done & ~over, over
 
@@ -168,7 +194,7 @@ class Controller:
 
             return mega
 
-        key = (self.cfg, self.quantum, s)
+        key = (self.cfg, self.quantum, s, self.obs)
         if key not in _FN_CACHE:
             _FN_CACHE[key] = {
                 "vmap_round": jax.jit(vmap_round, donate_argnums=(0, 1)),
@@ -292,6 +318,18 @@ class Controller:
             return jax.tree.map(lambda *v: jnp.stack(v), *self._pending_l)
         return self.pending
 
+    @staticmethod
+    def _flag_detail(flag_name, values, cap):
+        """Shared watermark formatter (both dispatch paths re-raise through
+        ``_check_overflow``, so fused and per-round messages stay byte
+        identical): names the tripped flag, the first segment past the cap,
+        and the cap itself, then the full per-segment watermark vector."""
+        values = np.asarray(values)
+        seg = int(np.flatnonzero(values > cap)[0])
+        return (f"flag '{flag_name}' tripped first at segment {seg} "
+                f"({int(values[seg])} > cap {cap}; per-segment watermarks "
+                f"{values.tolist()})")
+
     def _check_overflow(self, pending=None, states=None):
         # loud overflow sentinels: merge_pending and the segment step keep
         # sticky high-water marks of the capacity they needed; past-cap
@@ -303,28 +341,31 @@ class Controller:
         watermark = np.asarray(pending["max_count"])
         if (watermark > self.cfg.in_cap).any():
             raise RuntimeError(
-                f"pending inbox overflow (watermark {watermark.tolist()} > "
-                f"{self.cfg.in_cap}); raise in_cap (builder kwarg) or thin "
-                "the workload's traffic"
+                "pending inbox overflow: "
+                f"{self._flag_detail('inbox', watermark, self.cfg.in_cap)}; "
+                "raise in_cap (builder kwarg) or thin the workload's traffic"
             )
         states = self._stacked() if states is None else states
         out_peak = np.asarray(states["stats"]["outbox_peak"])
         if (out_peak > self.cfg.out_cap).any():
             raise RuntimeError(
-                f"outbox overflow (peak {out_peak.tolist()} > {self.cfg.out_cap}); "
+                "outbox overflow: "
+                f"{self._flag_detail('outbox', out_peak, self.cfg.out_cap)}; "
                 "raise out_cap (builder kwarg) or thin the workload's traffic"
             )
         store_peak = np.asarray(states["stats"]["store_peak"])
         if (store_peak > self.cfg.store_log).any():
             raise RuntimeError(
-                f"DRAM store-log overflow (peak {store_peak.tolist()} > "
-                f"{self.cfg.store_log} stores in one quantum); raise store_log "
+                "DRAM store-log overflow: "
+                f"{self._flag_detail('store_log', store_peak, self.cfg.store_log)}"
+                " stores in one quantum; raise store_log "
                 "(builder kwarg) or shrink the quantum"
             )
         mmio_late = np.asarray(states["stats"]["snn_mmio_late"])
         if (mmio_late > 0).any():
             raise RuntimeError(
-                f"late SNN MMIO ops ({mmio_late.tolist()} per segment): a "
+                "late SNN MMIO ops: "
+                f"{self._flag_detail('snn_mmio_late', mmio_late, 0)}: a "
                 "CIM_REG_SPIKE store executed at/after its target tick's grid "
                 "time, or a CIM_REG_COUNTS readback was served after the unit "
                 "ticked past the requested count — the result would depend on "
@@ -340,12 +381,12 @@ class Controller:
         (``platform.termination_flags`` — see its docstring for the exact
         semantics: running CPUs, in-flight CIM OPs, drainable spike-mode
         work, pending spike-count readbacks, pending messages); here it is
-        evaluated as one fused jitted call returning a single (5,) bool
-        array — done + the inbox/outbox/store-log watermarks and the
-        late-SNN-MMIO flag — instead of separate ``bool(jnp.any(...))``
-        host round-trips.
+        evaluated as one fused jitted call returning a single (6,) bool
+        array — done + the inbox/outbox/store-log watermarks, the
+        late-SNN-MMIO flag, and the informational trace-ring overflow
+        flag — instead of separate ``bool(jnp.any(...))`` host round-trips.
         """
-        d, in_over, out_over, store_over, mmio_late = np.asarray(
+        d, in_over, out_over, store_over, mmio_late, _trace_over = np.asarray(
             self._flags_fn(self._stacked(), self._pending_stacked())
         )
         if in_over or out_over or store_over or mmio_late:
@@ -380,8 +421,61 @@ class Controller:
         except Exception:
             pass
 
+    def _fetch(self, tree):
+        """The dispatch-boundary host sync: one ``jax.device_get`` of the
+        (round-count, done, over[, trace-ring]) tuple.  Counted so the
+        one-sync-per-dispatch contract is testable with telemetry on."""
+        self.dispatch_syncs += 1
+        return _HOST_FETCH(tree)
+
+    def _ingest(self, host_ring, on_telemetry=None):
+        """Account a fetched (host-side) ring: collect events, track loss."""
+        events, lost = obs_trace.drain(host_ring)
+        self.trace_lost += lost
+        if len(events):
+            self._events.append(events)
+            if on_telemetry is not None:
+                on_telemetry(events)
+
+    def drain_telemetry(self, on_telemetry=None):
+        """Fetch + reset the device trace rings; returns the drained batch.
+
+        For the host-loop backends this *is* a device sync, so ``run``
+        calls it only at ``check_every`` boundaries (where ``done()``
+        already syncs) and at the end; the fused megaloop never calls it —
+        its drain piggybacks on the dispatch fetch (``_fetch``).  No-op
+        (empty batch) when tracing is disabled.
+        """
+        if self.obs is None:
+            return np.empty(0, obs_trace.EVENT_DTYPE)
+        if self._list_mode:
+            ring = jax.tree.map(
+                lambda *v: jnp.stack(v), *[st["trace"] for st in self._states_l])
+            host = _HOST_FETCH(ring)
+            self._states_l = [
+                {**st, "trace": obs_trace.reset(st["trace"])}
+                for st in self._states_l
+            ]
+        else:
+            ring = self.states["trace"]
+            host = _HOST_FETCH(ring)
+            self.states = {**self.states, "trace": obs_trace.reset(ring)}
+        before = len(self._events)
+        self._ingest(host, on_telemetry)
+        return self._events[-1] if len(self._events) > before \
+            else np.empty(0, obs_trace.EVENT_DTYPE)
+
+    def trace_events(self):
+        """All telemetry drained so far, one structured array
+        (obs.trace.EVENT_DTYPE).  Batches are time-sorted per drain;
+        export.to_chrome_trace handles global ordering."""
+        if not self._events:
+            return np.empty(0, obs_trace.EVENT_DTYPE)
+        return np.concatenate(self._events)
+
     def run(self, max_rounds: int = 10_000, check_every: int = 4,
-            fused: bool | None = None, rounds_per_dispatch: int = 256):
+            fused: bool | None = None, rounds_per_dispatch: int = 256,
+            on_telemetry=None):
         """Run to completion; returns (rounds, host_seconds).
 
         ``vmap``/``shard_map`` default to the device-resident megaloop
@@ -393,6 +487,13 @@ class Controller:
         host just syncs ~K× less often.  ``sequential``/``threads`` always
         run the honest per-round host loop (they are the host-scheduling
         baselines; see docs/architecture.md) with the fused done-reducer.
+
+        ``on_telemetry`` (requires ``obs``) receives each drained batch of
+        trace events (np structured array) as it reaches the host — once
+        per fused dispatch, or at ``check_every`` boundaries on the
+        host-loop paths.  The fused drain piggybacks on the existing
+        dispatch sync (the flags tuple and the ring travel in ONE
+        ``jax.device_get``), so telemetry adds zero extra device syncs.
         """
         t0 = _time.perf_counter()
         self._require_open()
@@ -410,7 +511,18 @@ class Controller:
                     self.states, self.pending,
                     jnp.int32(ran), jnp.int32(k), jnp.int32(check_every),
                 )
-                i = int(i)  # the one host sync per dispatch
+                self.dispatches += 1
+                # the one host sync per dispatch: scalars AND the telemetry
+                # ring come back in a single transfer
+                if self.obs is None:
+                    i, d, o = self._fetch((i, d, o))
+                else:
+                    i, d, o, ring = self._fetch(
+                        (i, d, o, self.states["trace"]))
+                    self._ingest(ring, on_telemetry)
+                    self.states = {**self.states,
+                                   "trace": obs_trace.reset(self.states["trace"])}
+                i = int(i)
                 ran += i
                 self.rounds_run += i
                 done, over = bool(d), bool(o)
@@ -423,10 +535,22 @@ class Controller:
         else:
             for r in range(max_rounds):
                 self.round()
-                if (r + 1) % check_every == 0 and self.done():
-                    break
+                if (r + 1) % check_every == 0:
+                    try:
+                        finished = self.done()
+                    finally:
+                        # drain even when done() raises on a watermark, so
+                        # the telemetry preceding a crash is preserved —
+                        # same guarantee as the fused path (which drains on
+                        # the dispatch fetch before re-raising)
+                        if self.obs is not None:
+                            self.drain_telemetry(on_telemetry)
+                    if finished:
+                        break
             else:
                 self._check_overflow()  # done() may never have seen the last rounds
+            if self.obs is not None:
+                self.drain_telemetry(on_telemetry)
         self.block_until_ready()
         return self.rounds_run, _time.perf_counter() - t0
 
@@ -439,23 +563,18 @@ class Controller:
         return np.asarray(self._stacked()["time"])
 
     def stats(self):
-        states = self._stacked()
-        st = states["stats"]
-        return {
-            "instructions": np.asarray(st["instrs"]),
-            "messages": np.asarray(st["msgs"]),
-            "txn_histogram": np.asarray(st["txn_hist"]).sum(0),
-            "cache": {
-                "d_hits": np.asarray(states["dcache"]["hits"]),
-                "d_misses": np.asarray(states["dcache"]["misses"]),
-            },
-            "dram": {
-                "reads": np.asarray(states["dram"]["reads"]),
-                "writes": np.asarray(states["dram"]["writes"]),
-            },
-            "cim_ops": np.asarray(states["cims"]["ops"]),
-            "snn": {
-                "spikes": np.asarray(states["cims"]["spikes_total"]),
-                "ticks": np.asarray(states["cims"]["ticks"]),
-            },
-        }
+        """Historical coarse stats dict — a back-compat shim over the typed
+        metrics registry (obs/metrics.py ``legacy_stats``); prefer
+        ``metrics()`` for new code."""
+        from repro.obs import metrics as obs_metrics
+
+        return obs_metrics.legacy_stats(self._stacked())
+
+    def metrics(self):
+        """Typed metrics snapshot: ``{name: ndarray}`` over every metric in
+        the obs/metrics.py registry (counters, gauges, histograms —
+        including the channel occupancy/routed counters the stats() dict
+        never exposed)."""
+        from repro.obs import metrics as obs_metrics
+
+        return obs_metrics.collect(self._stacked(), self._pending_stacked())

@@ -1,0 +1,23 @@
+"""Observability subsystem: device-resident telemetry for the VP.
+
+Module map:
+  trace.py   — fixed-capacity trace event rings carried inside the megaloop
+               state; appended in traced code, drained at dispatch
+               boundaries (never an extra host sync), sticky overflow as
+               termination flag 6 (informational, never blocking)
+  metrics.py — typed metrics registry (counters/gauges/histograms) over the
+               simulation state; the back-compat source of
+               ``Controller.stats()``
+  export.py  — Chrome-trace/Perfetto JSON timeline export (per-segment /
+               per-CIM-unit tracks, cross-segment spike flow arrows) and
+               the NDJSON streaming format behind
+               ``Controller.run(..., on_telemetry=...)``
+
+Everything here is opt-in: ``Controller(obs=None)`` (the default) compiles
+all tracing out, leaving the hot path untouched; ``obs=TraceConfig(...)``
+turns it on with bit-identical simulation results (tests/test_obs.py,
+tests/test_conformance.py).  See docs/observability.md.
+"""
+from repro.obs.trace import EVENT_DTYPE, KIND_NAMES, TraceConfig
+
+__all__ = ["EVENT_DTYPE", "KIND_NAMES", "TraceConfig"]

@@ -1,0 +1,156 @@
+"""Device-resident trace event rings: the VP's telemetry capture layer.
+
+A *trace ring* is a fixed-capacity structure-of-arrays buffer of int32
+``(kind, seg, unit, t, value)`` records that rides INSIDE the simulation
+state pytree — one ring per segment, stacked like everything else — so
+traced code (the per-quantum segment step, under jit/vmap/shard_map and
+inside the controller's device-resident megaloop) can append events without
+any host round-trip.  The host drains rings only at dispatch boundaries,
+piggybacking on the controller's existing one-scalar-tuple sync
+(core/controller.py ``run``), which preserves the megaloop's
+one-device-sync-per-dispatch contract with telemetry enabled.
+
+Appends past capacity are *dropped, never blocking*: ``count`` keeps
+recording true demand, and the sticky ``overflowed`` flag joins
+``platform.termination_flags`` as flag 6 — purely informational (the
+controller reports lost events via ``trace_lost``; it never raises), unlike
+the channel watermarks, because losing telemetry must never change or stop
+a simulation.
+
+Event kinds (see docs/observability.md for the full schema):
+
+  ==============  ===============================  =====================
+  kind            unit field                       value field
+  ==============  ===============================  =====================
+  EV_QUANTUM      instructions this quantum        local-time advance
+  EV_ROUTE        inbox occupancy before consume   messages consumed
+  EV_TICK         CIM slot                         neurons fired
+  EV_SPIKE_TX     CIM slot (source)                dst_seg << 16 | spikes
+  EV_CIM_START    CIM slot                         busy_until (end time)
+  EV_CIM_DONE     CIM slot                         output rows DMA'd
+  EV_WMARK        -1                               watermark id (0..3)
+  ==============  ===============================  =====================
+
+``t`` is always the *simulated* time (cycles) the event belongs to —
+quantum start, LIF tick grid time, OP completion time — never host time,
+so traces are bit-identical across backends and dispatch modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+EV_QUANTUM = 0   # one per segment per round in which local time advanced
+EV_ROUTE = 1     # inbox messages consumed at the round's inbox application
+EV_TICK = 2      # a spike-mode unit fired its LIF tick
+EV_SPIKE_TX = 3  # AER spikes emitted toward one fan-out destination
+EV_CIM_START = 4  # a dense CIM OP launched (MMIO CIM_REG_START applied)
+EV_CIM_DONE = 5  # a dense CIM OP completed + DMA'd its output rows
+EV_WMARK = 6     # a sticky watermark tripped (first time only, per segment)
+
+KIND_NAMES = ("quantum", "route", "tick", "spike_tx", "cim_start",
+              "cim_done", "watermark")
+WMARK_NAMES = ("inbox", "outbox", "store_log", "snn_mmio_late")
+
+FIELDS = ("kind", "seg", "unit", "t", "value")
+EVENT_DTYPE = np.dtype([(f, np.int32) for f in FIELDS])
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """Static telemetry configuration (hashable: it keys the controller's
+    compiled-function cache — tracing is compiled *in* when present and
+    compiled *out* entirely when ``Controller(obs=None)``).
+
+    capacity: ring slots per segment.  Size it for the drain cadence: the
+    fused megaloop drains once per dispatch, so the ring must hold every
+    event of up to ``rounds_per_dispatch`` rounds (per-round dispatch and
+    the host-loop backends drain at every ``check_every`` boundary, which
+    needs far less).  Undersizing drops events and sets the sticky
+    overflow flag — it never blocks and never perturbs the simulation.
+    """
+    capacity: int = 4096
+
+
+def ring_state(cap: int):
+    """One segment's empty ring (stack n of them like the platform state)."""
+    ring = {f: jnp.zeros((cap,), jnp.int32) for f in FIELDS}
+    ring["count"] = jnp.zeros((), jnp.int32)        # demand, may exceed cap
+    ring["overflowed"] = jnp.zeros((), jnp.bool_)   # sticky: events were lost
+    ring["wmark_seen"] = jnp.zeros((), jnp.int32)   # EV_WMARK dedup bitmask
+    return ring
+
+
+def emit(ring, mask, kind, seg, unit, t, value):
+    """Append one record (if ``mask``) at the current count.
+
+    Past-capacity appends drop (scatter out-of-bounds, channel.py's "never
+    write a dead slot" rule); ``count`` still increments so the drain can
+    report how many events were lost."""
+    cap = ring["kind"].shape[0]
+    mask = jnp.asarray(mask)
+    i = jnp.where(mask & (ring["count"] < cap), ring["count"], cap)
+    out = dict(ring)
+    for f, v in (("kind", kind), ("seg", seg), ("unit", unit), ("t", t),
+                 ("value", value)):
+        out[f] = ring[f].at[i].set(jnp.asarray(v, jnp.int32), mode="drop")
+    out["count"] = ring["count"] + mask.astype(jnp.int32)
+    out["overflowed"] = ring["overflowed"] | (out["count"] > cap)
+    return out
+
+
+def emit_bulk(ring, mask, kind, seg, unit, t, value):
+    """Append a vector of records (``mask`` selects lanes) preserving lane
+    order.  Deliberately scatter-based, NOT the gather formulation of
+    channel.box_append_bulk: a gather/where pass is O(ring capacity) *per
+    emission site*, which dominates the dispatch-bound megaloop regime,
+    while a lane-serial scatter of a handful of records is O(lanes) and
+    updates the donated ring in place (the telemetry-overhead benchmark
+    line guards this).  Past-capacity records drop via out-of-bounds
+    indices (``mode="drop"``); ``count`` records true demand."""
+    cap = ring["kind"].shape[0]
+    n = mask.shape[0]
+    mask = mask.astype(jnp.int32)
+    offs = jnp.cumsum(mask) - mask  # rank of each selected lane, lane order
+    i = jnp.where(mask.astype(bool), ring["count"] + offs, cap)
+    out = dict(ring)
+    for f, v in (("kind", kind), ("seg", seg), ("unit", unit), ("t", t),
+                 ("value", value)):
+        vals = jnp.broadcast_to(jnp.asarray(v, jnp.int32), (n,))
+        out[f] = ring[f].at[i].set(vals, mode="drop")
+    out["count"] = ring["count"] + mask.sum()
+    out["overflowed"] = ring["overflowed"] | (out["count"] > cap)
+    return out
+
+
+def reset(ring):
+    """Ring after a host drain: count rewinds to zero, the sticky
+    ``overflowed`` flag and the EV_WMARK dedup mask are preserved (they
+    are cross-drain semantics, not buffer contents)."""
+    out = dict(ring)
+    out["count"] = jnp.zeros_like(ring["count"])
+    return out
+
+
+def drain(host_ring):
+    """Host-side drain of a stacked ``(S, ...)`` ring already fetched from
+    the device (plain numpy in, so this never adds a device sync).
+
+    Returns ``(events, lost)``: a chronologically sorted structured array
+    of ``EVENT_DTYPE`` records and the number of records dropped to
+    capacity since the previous drain."""
+    counts = np.asarray(host_ring["count"])
+    cap = np.asarray(host_ring["kind"]).shape[1]
+    parts, lost = [], 0
+    for s in range(counts.shape[0]):
+        n = int(counts[s])
+        lost += max(0, n - cap)
+        n = min(n, cap)
+        e = np.empty(n, EVENT_DTYPE)
+        for f in FIELDS:
+            e[f] = np.asarray(host_ring[f])[s, :n]
+        parts.append(e)
+    events = np.concatenate(parts) if parts else np.empty(0, EVENT_DTYPE)
+    return events[np.argsort(events["t"], kind="stable")], lost

@@ -32,6 +32,7 @@ from repro.snn.topology import (
     build_hybrid,
     build_snn,
     connectivity,
+    consumed_rates,
     edge_dsts,
     hybrid_results,
     is_cyclic,

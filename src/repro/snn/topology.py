@@ -406,6 +406,29 @@ def measure_traffic(states, meta):
     return rates, _rates_to_traffic(groups, rates, meta["edge_dsts"])
 
 
+def consumed_rates(states, meta):
+    """Per-group *consumed*-spike rates (AER events integrated per tick).
+
+    The receive-side complement of ``measure_traffic``'s emitted rates,
+    read from the per-unit ``spikes_in`` counters (vp/cim.py) that
+    ``_apply_inbox`` maintains.  Summed over a group's column tiles —
+    every tile integrates its own axon slice, so the group total is the
+    layer stripe's true fan-in traffic.  Emitted and consumed rates
+    together give the overlap-aware traffic matrix ROADMAP item 2 asks
+    for: emitted says what a stripe sends, consumed says what actually
+    landed (dropped/mis-addressed events are the difference).
+    """
+    cims = states["cims"]
+    rates = []
+    for info in meta["groups"]:
+        total = sum(float(np.asarray(cims["spikes_in"][seg, slot]))
+                    for seg, slot in info["units"])
+        seg, slot = info["units"][0]
+        ticks = int(np.asarray(cims["ticks"][seg, slot]))
+        rates.append(total / max(ticks, 1))
+    return np.array(rates)
+
+
 def _dsts_of(out_edges):
     return {l: [d for d, _ in out] for l, out in enumerate(out_edges) if out}
 
@@ -705,6 +728,9 @@ def _inject_raster(pending, n_segments, in_tiles, raster, tick_period):
     out["valid"] = jnp.asarray(valid)
     out["count"] = jnp.asarray(count)
     out["max_count"] = jnp.asarray(count)
+    # injected events are pre-scheduled, not routed: the routed-traffic
+    # counter (obs/metrics.py) starts at zero
+    out["routed_total"] = jnp.zeros((n_segments,), jnp.int32)
     return jax.tree.map(lambda a, b: b, pending, out)
 
 

@@ -94,6 +94,11 @@ def cim_state(n_slots: int, snn_fanout: int = 1):
         "owner_slot": jnp.arange(n_slots, dtype=jnp.int32),
         "spike_counts": z(n_slots, XBAR),  # emitted spikes per neuron
         "spikes_total": z(n_slots),
+        # consumed-side twin of spikes_total: AER events this unit actually
+        # integrated (vp/platform._apply_inbox) — the per-tile consumed
+        # spike rate obs/metrics.py and snn.consumed_rates report, feeding
+        # overlap-aware traffic matrices (ROADMAP item 2)
+        "spikes_in": z(n_slots),
         "ticks": z(n_slots),
         # pending spike-count readback request (CIM_REG_COUNTS): the target
         # tick count, or -1 for none.  Served at the quantum boundary once

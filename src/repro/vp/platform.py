@@ -119,6 +119,10 @@ def segment_state(cfg: VPConfig):
             # timing-dependent (round/quantum-sensitive), so the controller
             # raises loudly instead of returning placement-dependent results.
             "snn_mmio_late": jnp.zeros((), jnp.int32),
+            # AER spike events this segment's units actually integrated —
+            # the consumed side of the spike traffic (emitted side lives in
+            # cims["spikes_total"]); surfaced by obs/metrics.py
+            "spikes_consumed": jnp.zeros((), jnp.int32),
             "txn_hist": jnp.zeros((8,), jnp.int32),  # Fig. 1a trace histogram
         },
     }
@@ -129,7 +133,9 @@ def segment_state(cfg: VPConfig):
 
 
 def _apply_inbox(cfg: VPConfig, st, pending):
-    """Apply messages with t_avail <= time; return (st, pending', responses).
+    """Apply messages with t_avail <= time; return
+    ``(st, pending', responses, has_resp, consumed)`` — ``consumed`` is the
+    number of inbox messages this application retired (obs EV_ROUTE).
 
     AER spikes (MSG_SPIKE) are the exception to the arrival-time rule: a
     spike addressed to slot u integrates at u's next tick, so it is
@@ -248,6 +254,11 @@ def _apply_inbox(cfg: VPConfig, st, pending):
         cims["in_buf"] = cims["in_buf"].reshape(-1).at[tgt].add(
             jnp.where(msu, data, 0), mode="drop"
         ).reshape(cfg.n_cim_slots, cim_mod.XBAR)
+        # consumed-spike accounting (obs/metrics.py): events integrated, per
+        # unit and per segment — dropped/mis-addressed events don't count
+        cims["spikes_in"] = cims["spikes_in"].at[
+            jnp.where(msu, su, cfg.n_cim_slots)
+        ].add(1, mode="drop")
         spk_applied = (spk & ~in_range) | msu | mdrop
 
     st = dict(st)
@@ -255,9 +266,15 @@ def _apply_inbox(cfg: VPConfig, st, pending):
     st["dram"] = dram
     st["cims"] = cims
     st["stats"] = dict(st["stats"])
+    retired = m | spk_applied
+    consumed = retired.sum().astype(jnp.int32)
     st["stats"]["txn_hist"] = st["stats"]["txn_hist"].at[jnp.clip(kind, 0, 7)].add(
-        (m | spk_applied).astype(jnp.int32)
+        retired.astype(jnp.int32)
     )
+    if cfg.has_snn:
+        st["stats"]["spikes_consumed"] = (
+            st["stats"]["spikes_consumed"] + msu.sum().astype(jnp.int32)
+        )
 
     if cfg.has_cpu:
         # --- blocking DRAM read requests: service now, respond via outbox ---
@@ -282,7 +299,7 @@ def _apply_inbox(cfg: VPConfig, st, pending):
 
     pending = dict(pending)
     pending["valid"] = pending["valid"] & ~m & ~spk_applied
-    return st, pending, responses, has_resp
+    return st, pending, responses, has_resp, consumed
 
 
 def _maybe_config(cims, u, pred, val):
@@ -416,13 +433,48 @@ def _mem_access(cfg: VPConfig, hot, dram_data, outbox, mem):
     return hot, outbox, cycles, val, remote_ld
 
 
-def make_segment_step(cfg: VPConfig, quantum: int):
-    """Compile-ready pure step for ONE segment."""
+def make_segment_step(cfg: VPConfig, quantum: int, obs=None):
+    """Compile-ready pure step for ONE segment.
+
+    ``obs`` (an ``obs.trace.TraceConfig`` or None) is *static*: when None —
+    the default — every telemetry emission below is dead code and the
+    compiled step is byte-for-byte the untraced hot path.  When set, the
+    emission sites collect masked *lanes* (pure bookkeeping on values the
+    step already computes) and the step appends them all to the
+    per-segment ring riding in ``st["trace"]`` (attached by the
+    controller) with ONE ``emit_bulk`` at the end — a single handful-of-
+    lanes scatter per round, which is what keeps the telemetry overhead
+    small in the dispatch-bound megaloop regime.  Emissions never read the
+    ring contents, only append, so they cannot perturb simulation state —
+    traced runs are bit-identical to untraced runs minus the ring itself.
+    """
     t = cfg.timing
+    if obs is not None:
+        from repro.obs import trace as tr
 
     def step(st, pending, t_limit):
         t_inbox = st["time"]  # the SNN tick gate: time the inbox was applied at
-        st, pending, responses, _ = _apply_inbox(cfg, st, pending)
+        if obs is not None:
+            lanes = []  # (mask, kind, unit, t, value) rows, emitted in order
+
+            def lane(mask, kind, unit, tt, value):
+                mask = jnp.atleast_1d(jnp.asarray(mask))
+                n = mask.shape[0]
+                b = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.int32), (n,))
+                lanes.append((mask, b(kind), b(unit), b(tt), b(value)))
+
+            occ0 = pending["valid"].sum().astype(jnp.int32)
+            instr0 = st["stats"]["instrs"]
+            cim_state0 = st["cims"]["state"]
+        st, pending, responses, _, consumed = _apply_inbox(cfg, st, pending)
+        if obs is not None:
+            lane(consumed > 0, tr.EV_ROUTE, occ0, t_inbox, consumed)
+            if cfg.has_cpu:
+                # a dense OP can only launch via an MMIO START in this inbox
+                started = ((st["cims"]["state"] == isa.CIM_ST_OP)
+                           & (cim_state0 != isa.CIM_ST_OP))
+                lane(started, tr.EV_CIM_START, jnp.arange(cfg.n_cim_slots),
+                     t_inbox, st["cims"]["busy_until"])
         outbox = ch.empty_box(cfg.out_cap)
 
         if cfg.has_cpu:
@@ -522,6 +574,9 @@ def make_segment_step(cfg: VPConfig, quantum: int):
         if cfg.has_cpu:
             cims, done = cim_mod.finish_ops(st["cims"], st["time"], cfg.use_kernel)
             st["cims"] = cims
+            if obs is not None:
+                lane(done, tr.EV_CIM_DONE, jnp.arange(cfg.n_cim_slots),
+                     jnp.maximum(cims["op_done_at"], 0), cims["rows"])
             for u in range(cfg.n_cim_slots):
                 du = done[u]
                 rows = jnp.arange(cim_mod.XBAR)
@@ -538,10 +593,13 @@ def make_segment_step(cfg: VPConfig, quantum: int):
 
         # --- SNN tick at the quantum boundary: LIF integration + AER out ---
         if cfg.has_snn:
-            cims, fired_rows, _, tick_time = cim_mod.snn_tick(
+            cims, fired_rows, fire, tick_time = cim_mod.snn_tick(
                 st["cims"], t_inbox, cfg.use_kernel, cfg.snn_grouped
             )
             st["cims"] = cims
+            if obs is not None:
+                lane(fire, tr.EV_TICK, jnp.arange(cfg.n_cim_slots),
+                     tick_time, fired_rows.sum(-1).astype(jnp.int32))
             rows = jnp.arange(cim_mod.XBAR)
             for u in range(cfg.n_cim_slots):
                 for d in range(cfg.snn_fanout):
@@ -562,6 +620,15 @@ def make_segment_step(cfg: VPConfig, quantum: int):
                         (cims["dst_slot"][u, d] << 16) | dst_axon,
                         jnp.ones((), jnp.int32), tick_time[u],
                     )
+                    if obs is not None:
+                        # one EV_SPIKE_TX per (unit, fan-out entry) tick
+                        # burst; value packs destination + spike count so
+                        # export.py can draw cross-segment flow arrows
+                        n_spk = emit.sum().astype(jnp.int32)
+                        lane(fire[u] & (cims["dst_seg"][u, d] >= 0)
+                             & (n_spk > 0),
+                             tr.EV_SPIKE_TX, u, tick_time[u],
+                             (cims["dst_seg"][u, d] << 16) | n_spk)
 
         # --- spike-count readback service (CIM_REG_COUNTS, hybrid jobs) ---
         # a pending request is served at the first boundary where the unit's
@@ -610,6 +677,32 @@ def make_segment_step(cfg: VPConfig, quantum: int):
         # AER burst) were dropped — checked loudly by the controller
         # alongside the inbox watermark
         st["stats"]["outbox_peak"] = jnp.maximum(st["stats"]["outbox_peak"], outbox["count"])
+        if obs is not None:
+            dt = st["time"] - t_inbox
+            lane(dt > 0, tr.EV_QUANTUM, st["stats"]["instrs"] - instr0,
+                 t_inbox, dt)
+            # watermark trips, deduped through the ring's wmark_seen bitmask
+            # so each flag traces once per segment (the flag itself stays
+            # sticky in stats/pending; detection here is advisory telemetry,
+            # the controller still raises from termination_flags)
+            trip = (
+                (pending["max_count"] > cfg.in_cap).astype(jnp.int32)
+                | ((st["stats"]["outbox_peak"] > cfg.out_cap).astype(jnp.int32) << 1)
+                | ((st["stats"]["store_peak"] > cfg.store_log).astype(jnp.int32) << 2)
+                | ((st["stats"]["snn_mmio_late"] > 0).astype(jnp.int32) << 3)
+            )
+            new = trip & ~st["trace"]["wmark_seen"]
+            wbit = jnp.arange(len(tr.WMARK_NAMES))
+            lane(((new >> wbit) & 1).astype(bool), tr.EV_WMARK,
+                 jnp.full(wbit.shape, -1), st["time"], wbit)
+            # the one ring append of the whole step: every site above only
+            # collected lanes
+            mask, kind, unit, tt, value = (jnp.concatenate(xs)
+                                           for xs in zip(*lanes))
+            ring = dict(tr.emit_bulk(st["trace"], mask, kind, st["seg_id"],
+                                     unit, tt, value))
+            ring["wmark_seen"] = ring["wmark_seen"] | trip
+            st["trace"] = ring
         return st, outbox, pending
 
     return step
@@ -621,8 +714,8 @@ def make_segment_step(cfg: VPConfig, quantum: int):
 
 def termination_flags(states, pending, in_cap: int, out_cap: int,
                       store_log: int):
-    """Traced ``(done, inbox_over, outbox_over, store_over, mmio_late)``
-    over the stacked simulation.
+    """Traced ``(done, inbox_over, outbox_over, store_over, mmio_late,
+    trace_over)`` over the stacked simulation.
 
     This is the controller's termination predicate and overflow watermark
     check as *traced* code, so it runs both host-side (one fused device
@@ -652,6 +745,13 @@ def termination_flags(states, pending, in_cap: int, out_cap: int,
       tick-grid deadline, so its effect would be round-timing-dependent;
       the controller raises instead of returning placement-dependent
       results.
+    - ``trace_over`` (flag 6): the telemetry ring's sticky overflow mark
+      (obs/trace.py) — events were dropped to ring capacity.  Unlike every
+      other watermark this one is *informational only*: telemetry loss
+      must never stop or perturb a simulation, so the controller reports
+      it (``Controller.trace_lost``) instead of raising, and it is
+      excluded from the megaloop's early-exit predicate.  Constant False
+      when tracing is disabled (no ring in the state).
     """
     from repro.vp import isa
 
@@ -673,4 +773,6 @@ def termination_flags(states, pending, in_cap: int, out_cap: int,
     outbox_over = (states["stats"]["outbox_peak"] > out_cap).any()
     store_over = (states["stats"]["store_peak"] > store_log).any()
     mmio_late = (states["stats"]["snn_mmio_late"] > 0).any()
-    return done, inbox_over, outbox_over, store_over, mmio_late
+    trace_over = (states["trace"]["overflowed"].any() if "trace" in states
+                  else jnp.array(False))
+    return done, inbox_over, outbox_over, store_over, mmio_late, trace_over

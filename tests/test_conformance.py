@@ -131,12 +131,16 @@ MODES = (  # every in-process execution path
 )
 
 
-def run_mode(sim, backend, quantum, fused, check_every=2, max_rounds=400):
+def run_mode(sim, backend, quantum, fused, check_every=2, max_rounds=400,
+             obs=None):
     cfg, states, pending = sim
-    ctl = Controller(cfg, states, pending, backend=backend, quantum=quantum)
+    ctl = Controller(cfg, states, pending, backend=backend, quantum=quantum,
+                     obs=obs)
     rounds, _ = ctl.run(max_rounds=max_rounds, check_every=check_every,
                         fused=fused)
-    out = (rounds, ctl.result_states(), ctl._pending_stacked())
+    states_out = dict(ctl.result_states())
+    states_out.pop("trace", None)  # the ring is telemetry, not simulation
+    out = (rounds, states_out, ctl._pending_stacked())
     return out, ctl
 
 
@@ -274,6 +278,126 @@ if HAVE_HYPOTHESIS:
         check(ctl)
         ctl.close()
         assert_identical(got, ref, f"{kind}/{strategy}/q{quantum}/{backend}")
+
+
+# ---------------------------------------------------------------------------
+# telemetry conformance: tracing must be invisible to the simulation
+
+
+OBS_SWEEP = [  # one representative cell per workload class
+    ("dense", "uniform", 1000),
+    ("snn_ff", "uniform", 32),
+    ("snn_recurrent", "uniform", 32),
+    ("hybrid", "packed", 400),
+]
+
+
+@pytest.mark.parametrize("kind,strategy,quantum", OBS_SWEEP)
+def test_tracing_is_bit_invisible(kind, strategy, quantum):
+    """obs=TraceConfig() must not change results, rounds_run, sim_time, or
+    pending boxes on any in-process backend × dispatch mode — and the
+    traced run still reproduces its oracle exactly."""
+    from repro.obs import TraceConfig
+
+    sim, check = build_sim(kind, strategy)
+    for label, backend, fused in MODES:
+        plain, pctl = run_mode(sim, backend, quantum, fused)
+        pctl.close()
+        traced, tctl = run_mode(sim, backend, quantum, fused,
+                                obs=TraceConfig())
+        check(tctl)
+        assert len(tctl.trace_events()), f"{label}: traced run saw no events"
+        tctl.close()
+        assert_identical(traced, plain,
+                         f"{kind}/{strategy}/q{quantum}/{label}/traced")
+
+
+def test_one_host_sync_per_fused_dispatch_with_telemetry(monkeypatch):
+    """The megaloop contract with telemetry ON: each fused dispatch performs
+    exactly one host fetch (the (rounds, done, over, ring) tuple) — draining
+    the trace rings must not add device syncs."""
+    import repro.core.controller as ctl_mod
+    from repro.obs import TraceConfig
+
+    real, calls = ctl_mod._HOST_FETCH, []
+
+    def counting_fetch(tree):
+        calls.append(1)
+        return real(tree)
+
+    monkeypatch.setattr(ctl_mod, "_HOST_FETCH", counting_fetch)
+    sim, check = build_sim("snn_ff", "uniform")
+    ctl = Controller(*sim, backend="vmap", quantum=32, obs=TraceConfig())
+    ctl.run(max_rounds=400, check_every=2, fused=True,
+            rounds_per_dispatch=64)
+    check(ctl)
+    assert ctl.dispatches >= 1
+    assert len(calls) == ctl.dispatches == ctl.dispatch_syncs, \
+        "fused dispatches must stay one-host-sync each with tracing on"
+
+
+def test_stats_shim_matches_across_backends():
+    """stats() (the back-compat shim over obs/metrics.py) returns the same
+    dict on every backend — the coarse counters are part of the conformance
+    surface, not just the raw states."""
+    sim, _ = build_sim("snn_ff", "uniform")
+    ref = None
+    for label, backend, fused in MODES:
+        _, ctl = run_mode(sim, backend, 32, fused)
+        st = ctl.stats()
+        ctl.close()
+        assert set(st) == {"instructions", "messages", "txn_histogram",
+                           "cache", "dram", "cim_ops", "snn"}
+        if ref is None:
+            ref = st
+        else:
+            for x, y in zip(jax.tree.leaves(st), jax.tree.leaves(ref)):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y),
+                    err_msg=f"{label}: stats() differs")
+
+
+def test_conformance_shard_map_traced(subproc):
+    """Telemetry on the fourth backend: a traced shard_map run must match a
+    traced vmap run bit-for-bit (states minus the ring AND the drained
+    event stream), and both must match the untraced reference."""
+    subproc(
+        """
+import jax, numpy as np
+from repro import compat, snn
+from repro.core.controller import Controller
+from repro.obs import TraceConfig
+from repro.obs import trace as tr
+
+mesh = compat.make_mesh((2,), ("segment",))
+ff = snn.snn_inference_job((24, 16, 8), t_steps=6, rate=0.5, seed=2)
+descs = snn.segmentation_for(ff.layers, "uniform", n_segments=2)
+cfg, states, pending, _ = snn.build_snn(ff.layers, descs, ff.raster)
+
+res = {}
+for name, backend, kw, obs in (
+        ("vmap", "vmap", {}, None),
+        ("vmap+obs", "vmap", {}, TraceConfig()),
+        ("shard+obs", "shard_map", {"mesh": mesh}, TraceConfig())):
+    ctl = Controller(cfg, states, pending, backend=backend, quantum=32,
+                     obs=obs, **kw)
+    rounds, _ = ctl.run(max_rounds=400, check_every=2)
+    st = dict(ctl.result_states()); st.pop("trace", None)
+    ev = np.sort(ctl.trace_events(), order=list(tr.FIELDS))
+    res[name] = (rounds, st, ctl._pending_stacked(), ev)
+
+for name in ("vmap+obs", "shard+obs"):
+    assert res[name][0] == res["vmap"][0], name
+    for x, y in zip(jax.tree.leaves(res[name][1:3]),
+                    jax.tree.leaves(res["vmap"][1:3])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+np.testing.assert_array_equal(res["shard+obs"][3], res["vmap+obs"][3])
+assert len(res["shard+obs"][3]) > 0
+print("traced shard_map conformance OK")
+""",
+        n_devices=2,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,267 @@
+"""Observability subsystem: trace-ring mechanics, drain/loss accounting,
+metrics registry + the ``stats()`` back-compat contract, and the
+Chrome-trace/NDJSON exporters.
+
+The cross-cutting guarantees (tracing bit-invisible on every backend ×
+dispatch mode, one host sync per fused dispatch) live in
+tests/test_conformance.py; this file covers the obs/ package itself.
+"""
+import io
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import snn
+from repro.core.controller import Controller
+from repro.obs import TraceConfig, export
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as tr
+
+
+def _stack1(ring):
+    """A single ring as the stacked (1, ...) layout ``drain`` expects."""
+    return jax.tree.map(lambda x: np.asarray(x)[None], ring)
+
+
+# ---------------------------------------------------------------------------
+# ring mechanics
+
+
+def test_emit_respects_mask_and_drain_sorts_by_time():
+    ring = tr.ring_state(8)
+    for i, t in enumerate((5, 3, 7)):
+        ring = tr.emit(ring, True, tr.EV_TICK, 0, i, t, i * 10)
+    ring = tr.emit(ring, False, tr.EV_TICK, 0, 99, 0, 0)  # masked out
+    assert int(ring["count"]) == 3
+    events, lost = tr.drain(_stack1(ring))
+    assert lost == 0 and len(events) == 3
+    assert events["t"].tolist() == [3, 5, 7]          # chronological
+    assert events["unit"].tolist() == [1, 0, 2]       # records follow
+    assert 99 not in events["unit"].tolist()
+
+
+def test_overflow_drops_records_but_counts_demand():
+    ring = tr.ring_state(2)
+    for i in range(5):
+        ring = tr.emit(ring, True, tr.EV_QUANTUM, 0, 0, i, i)
+    assert int(ring["count"]) == 5, "count records true demand"
+    assert bool(ring["overflowed"])
+    events, lost = tr.drain(_stack1(ring))
+    assert lost == 3
+    assert events["t"].tolist() == [0, 1], "first records survive, no wrap"
+
+
+def test_emit_bulk_matches_sequential_emits():
+    mask = jnp.array([True, False, True, True, False, True])
+    unit = jnp.arange(6)
+    t = jnp.array([4, 0, 2, 9, 0, 2])
+    value = jnp.arange(6) * 7
+    bulk = tr.emit_bulk(tr.ring_state(8), mask, tr.EV_SPIKE_TX, 1,
+                        unit, t, value)
+    seq = tr.ring_state(8)
+    for i in range(6):
+        seq = tr.emit(seq, bool(mask[i]), tr.EV_SPIKE_TX, 1,
+                      int(unit[i]), int(t[i]), int(value[i]))
+    assert int(bulk["count"]) == int(seq["count"]) == 4
+    for f in tr.FIELDS:
+        np.testing.assert_array_equal(np.asarray(bulk[f])[:4],
+                                      np.asarray(seq[f])[:4])
+
+
+def test_emit_bulk_truncates_at_capacity():
+    mask = jnp.ones(5, bool)
+    ring = tr.emit_bulk(tr.ring_state(3), mask, tr.EV_TICK, 0,
+                        jnp.arange(5), jnp.arange(5), jnp.zeros(5, jnp.int32))
+    assert int(ring["count"]) == 5 and bool(ring["overflowed"])
+    events, lost = tr.drain(_stack1(ring))
+    assert lost == 2 and events["unit"].tolist() == [0, 1, 2]
+
+
+def test_reset_rewinds_count_but_keeps_sticky_flags():
+    ring = tr.ring_state(1)
+    for i in range(3):
+        ring = tr.emit(ring, True, tr.EV_WMARK, 0, -1, i, 1)
+    ring["wmark_seen"] = jnp.asarray(0b0010, jnp.int32)
+    ring = tr.reset(ring)
+    assert int(ring["count"]) == 0
+    assert bool(ring["overflowed"]), "overflow is cross-drain sticky"
+    assert int(ring["wmark_seen"]) == 0b0010, "watermark dedup is sticky"
+
+
+# ---------------------------------------------------------------------------
+# exporters (synthetic events: one of each kind)
+
+
+def _events(recs):
+    e = np.empty(len(recs), tr.EVENT_DTYPE)
+    for i, r in enumerate(recs):
+        e[i] = r
+    return e
+
+
+SYNTHETIC = _events([
+    (tr.EV_QUANTUM, 0, 120, 0, 32),
+    (tr.EV_ROUTE, 1, 4, 32, 6),
+    (tr.EV_TICK, 1, 0, 40, 3),
+    (tr.EV_SPIKE_TX, 1, 0, 40, (0 << 16) | 3),
+    (tr.EV_CIM_START, 0, 1, 50, 90),
+    (tr.EV_CIM_DONE, 0, 1, 90, 8),
+    (tr.EV_WMARK, 0, -1, 95, 1),
+])
+
+
+def test_chrome_trace_schema_valid_and_json_roundtrips(tmp_path):
+    obj = export.write_chrome_trace(tmp_path / "t.json", SYNTHETIC,
+                                    tick_period=16)
+    assert export.validate_chrome_trace(obj) == []
+    back = json.loads((tmp_path / "t.json").read_text())
+    assert back["traceEvents"] == obj["traceEvents"]
+    phases = {e["ph"] for e in obj["traceEvents"]}
+    assert phases == {"M", "X", "C", "i", "s", "f"}
+    # the spike flow lands at the destination segment one tick later
+    s = next(e for e in obj["traceEvents"] if e["ph"] == "s")
+    f = next(e for e in obj["traceEvents"] if e["ph"] == "f")
+    assert f["pid"] == 0 and f["ts"] == s["ts"] + 16
+
+
+def test_validate_rejects_malformed_traces():
+    assert export.validate_chrome_trace({}) != []
+    assert export.validate_chrome_trace({"traceEvents": []}) != []
+    obj = export.to_chrome_trace(SYNTHETIC)
+    bad = json.loads(json.dumps(obj))
+    del next(e for e in bad["traceEvents"] if e["ph"] == "X")["ts"]
+    assert any("ts" in p for p in export.validate_chrome_trace(bad))
+    orphan = json.loads(json.dumps(obj))
+    orphan["traceEvents"] = [e for e in orphan["traceEvents"]
+                             if e["ph"] != "f"]
+    assert any("s/f pair" in p for p in export.validate_chrome_trace(orphan))
+
+
+def test_ndjson_writes_one_named_record_per_event():
+    fh = io.StringIO()
+    n = export.write_ndjson(fh, SYNTHETIC)
+    lines = [json.loads(l) for l in fh.getvalue().splitlines()]
+    assert n == len(lines) == len(SYNTHETIC)
+    assert [l["kind"] for l in lines] == list(tr.KIND_NAMES)
+    assert lines[1] == {"kind": "route", "seg": 1, "unit": 4, "t": 32,
+                        "value": 6}
+
+
+# ---------------------------------------------------------------------------
+# a real traced run (shared fixture: hybrid = CPUs + dense CIM + SNN, so
+# every metric source is exercised)
+
+
+@pytest.fixture(scope="module")
+def hybrid_run():
+    job = snn.hybrid_job((16, 12, 8), t_steps=6, rate=0.5, seed=2)
+    cfg, states, pending, meta = snn.build_hybrid(job, "packed",
+                                                  channel_latency=2000)
+    ctl = Controller(cfg, states, pending, backend="vmap", quantum=400,
+                     obs=TraceConfig())
+    ctl.run(max_rounds=800, check_every=2, fused=True)
+    plain = Controller(cfg, states, pending, backend="vmap", quantum=400)
+    plain.run(max_rounds=800, check_every=2, fused=True)
+    return ctl, plain, job, meta, cfg
+
+
+def test_stats_backcompat_contract(hybrid_run):
+    """The historical stats() dict shape and values, pinned — the shim over
+    obs/metrics.py must stay bit-compatible with pre-obs callers."""
+    ctl = hybrid_run[0]
+    st = ctl.stats()
+    assert set(st) == {"instructions", "messages", "txn_histogram", "cache",
+                       "dram", "cim_ops", "snn"}
+    assert set(st["cache"]) == {"d_hits", "d_misses"}
+    assert set(st["dram"]) == {"reads", "writes"}
+    assert set(st["snn"]) == {"spikes", "ticks"}
+    m = ctl.metrics()
+    np.testing.assert_array_equal(st["instructions"], m["cpu.instructions"])
+    np.testing.assert_array_equal(st["messages"],
+                                  m["channel.messages_emitted"])
+    np.testing.assert_array_equal(st["txn_histogram"],
+                                  m["channel.txn_histogram"].sum(0))
+    np.testing.assert_array_equal(st["cim_ops"], m["cim.dense_ops"])
+    np.testing.assert_array_equal(st["snn"]["spikes"],
+                                  m["snn.spikes_emitted"])
+    assert int(st["instructions"].sum()) > 0
+    assert int(st["cim_ops"].sum()) > 0
+    assert int(st["snn"]["spikes"].sum()) > 0
+
+
+def test_metrics_registry_is_typed_and_complete(hybrid_run):
+    ctl = hybrid_run[0]
+    for m in obs_metrics.REGISTRY.values():
+        assert m.kind in ("counter", "gauge", "histogram"), m.name
+        assert m.per in ("segment", "unit", "bin"), m.name
+        assert m.source in ("states", "pending"), m.name
+        assert m.description
+    snap = ctl.metrics()
+    assert set(snap) == set(obs_metrics.REGISTRY)
+    # without a pending box, pending-sourced metrics are skipped, not wrong
+    partial = obs_metrics.collect(ctl.result_states())
+    assert set(partial) == {n for n, m in obs_metrics.REGISTRY.items()
+                            if m.source == "states"}
+    # the new consumed-side counters move (ROADMAP item 2 feed)
+    assert int(snap["snn.spikes_consumed"].sum()) > 0
+    assert int(snap["snn.spikes_in"].sum()) > 0
+    assert int(snap["channel.messages_routed"].sum()) > 0
+
+
+def test_trace_events_consistent_with_simulation(hybrid_run):
+    ctl, plain, job, meta, cfg = hybrid_run
+    ev = ctl.trace_events()
+    assert ctl.trace_lost == 0
+    kinds = ev["kind"]
+    # every LIF spike shows up on a tick event exactly once
+    fired = ev["value"][kinds == tr.EV_TICK].sum()
+    assert int(fired) == int(snn.total_spikes(plain.result_states()))
+    # quantum events only ever advance time
+    assert (ev["value"][kinds == tr.EV_QUANTUM] > 0).all()
+    # the exported timeline is schema-valid
+    obj = export.to_chrome_trace(ev, tick_period=cfg.snn_tick_period)
+    assert export.validate_chrome_trace(obj) == []
+
+
+def test_undersized_ring_is_informational_never_perturbs():
+    job = snn.snn_inference_job((16, 12, 8), t_steps=6, rate=0.5, seed=3)
+    descs = snn.segmentation_for(len(job.layers), "uniform", n_segments=2)
+    cfg, states, pending, meta = snn.build_snn(job.layers, descs, job.raster)
+    ref = Controller(cfg, states, pending, backend="vmap", quantum=32)
+    ref.run(max_rounds=300, check_every=2, fused=True)
+    tiny = Controller(cfg, states, pending, backend="vmap", quantum=32,
+                      obs=TraceConfig(capacity=8))
+    tiny.run(max_rounds=300, check_every=2, fused=True)  # must not raise
+    assert tiny.trace_lost > 0, "an 8-slot ring must overflow here"
+    assert tiny.rounds_run == ref.rounds_run
+    st = dict(tiny.result_states())
+    st.pop("trace")
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(ref.result_states())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        snn.output_spike_counts(tiny.result_states(), meta),
+        job.expected_counts)
+
+
+def test_event_stream_identical_across_dispatch_modes():
+    job = snn.snn_inference_job((16, 12, 8), t_steps=6, rate=0.5, seed=3)
+    descs = snn.segmentation_for(len(job.layers), "uniform", n_segments=2)
+    cfg, states, pending, _ = snn.build_snn(job.layers, descs, job.raster)
+    streams = {}
+    batches = {}
+    for fused in (False, True):
+        got = []
+        ctl = Controller(cfg, states, pending, backend="vmap", quantum=32,
+                         obs=TraceConfig())
+        ctl.run(max_rounds=300, check_every=2, fused=fused,
+                on_telemetry=got.append)
+        streams[fused] = np.sort(ctl.trace_events(), order=list(tr.FIELDS))
+        batches[fused] = got
+    np.testing.assert_array_equal(streams[False], streams[True])
+    # the callback saw exactly what trace_events() accumulated
+    for fused, got in batches.items():
+        assert sum(len(b) for b in got) == len(streams[fused])
+        assert all(len(b) for b in got), "empty batches are not delivered"
