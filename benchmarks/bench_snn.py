@@ -23,6 +23,13 @@ CIM_REG_COUNTS, publishing them to shared DRAM.  Both halves are
 oracle-verified while timed, per platform shape (split / packed /
 traffic-aware auto).
 
+The *faults* scenario prices the fault-injection subsystem
+(docs/faults.md): the dispatch-bound megaloop workload runs fault-free
+(``faults=None``, compiled out) and with live seeded transport faults,
+asserting <10% overhead and fused/per-round bit-identity, then sweeps the
+drop rate through ``snn.degradation_sweep`` and requires the fidelity
+curve to start at exactly 1.0 and fall monotonically.
+
 The *wide* scenario exercises multi-crossbar layers: a 600-neuron hidden
 layer shards into three row stripes, and its 600-axon consumer tiles into
 a co-located column group.  Naive (chain-order uniform) placement is
@@ -248,6 +255,71 @@ def run_trace_overhead(sizes=MEGA_SIZES, t_steps=MEGA_T_STEPS, seed=2):
     }
 
 
+FAULT_RATES = (0.0, 0.2, 0.5, 1.0)
+FAULT_ON = dict(seed=7, p_spike_drop=0.1, p_spike_dup=0.05)
+
+
+def run_faults(sizes=MEGA_SIZES, t_steps=MEGA_T_STEPS, seed=2):
+    """Fault-injection overhead + the degradation curve (docs/faults.md).
+
+    Two claims, measured on the megaloop scenario (dispatch-bound, so any
+    extra per-round device work is maximally visible):
+
+    * **overhead** — the same fused-vmap workload runs fault-free
+      (``faults=None``, the subsystem compiled out) and with live transport
+      faults (seeded per-spike drop/dup hashing inside the loop), best-of-3
+      each; the fault-on run must also be bit-identical fused vs per-round
+      (seeded determinism is part of ``ok``, and injection overhead must
+      stay under 10%).
+    * **degradation** — ``snn.degradation_sweep`` drives p_spike_drop
+      through FAULT_RATES; fidelity must be exactly 1.0 at rate 0 (faults
+      compiled out ≡ baseline) and weakly monotone in rate (the nested-CRN
+      hash guarantee), within a small tolerance for integer spike counts.
+    """
+    from repro.faults import FaultConfig
+
+    job = snn.snn_inference_job(sizes, t_steps=t_steps, rate=0.2, seed=seed)
+    descs = snn.segmentation_for(len(job.layers), "uniform", n_segments=2)
+    off = snn.build_snn(job.layers, descs, job.raster, **MEGA_CAPS)
+    on = snn.build_snn(job.layers, descs, job.raster,
+                       faults=FaultConfig(**FAULT_ON), **MEGA_CAPS)
+    t_off = t_on = float("inf")
+    for _ in range(3):
+        t, ctl_off = _timed(*off[:3], "vmap", fused=True)
+        t_off = min(t_off, t)
+        t, ctl_on = _timed(*on[:3], "vmap", fused=True)
+        t_on = min(t_on, t)
+    # faults=None must stay oracle-exact …
+    counts = snn.output_spike_counts(ctl_off.result_states(), off[3])
+    ok = bool(np.array_equal(counts, job.expected_counts))
+    # … and the faulted run bit-identical fused vs per-round (determinism)
+    _, ctl_pr = _timed(*on[:3], "vmap", fused=False)
+    for a, b in zip(jax.tree.leaves(ctl_on.result_states()),
+                    jax.tree.leaves(ctl_pr.result_states())):
+        ok &= bool(np.array_equal(np.asarray(a), np.asarray(b)))
+    st = ctl_on.result_states()["stats"]
+    overhead = (t_on / t_off - 1.0) * 100.0
+    ok &= overhead <= 10.0
+
+    sweep = snn.degradation_sweep(job, FAULT_RATES, fault_kind="transport",
+                                  seed=FAULT_ON["seed"], **MEGA_CAPS)
+    fids = [r["fidelity"] for r in sweep]
+    ok &= fids[0] == 1.0
+    ok &= all(fids[i] + 1e-9 >= fids[i + 1] - 0.02
+              for i in range(len(fids) - 1))
+    return {
+        "off_s": t_off, "on_s": t_on,
+        "off_rps": ctl_off.rounds_run / t_off,
+        "on_rps": ctl_on.rounds_run / t_on,
+        "overhead_pct": overhead,
+        "rounds": ctl_on.rounds_run,
+        "dropped": int(np.asarray(st["spikes_dropped"]).sum()),
+        "duped": int(np.asarray(st["spikes_duped"]).sum()),
+        "rates": list(FAULT_RATES), "fidelity": fids,
+        "identical": ok,
+    }
+
+
 HYBRID_SIZES = (48, 40, 16)
 HYBRID_T_STEPS = 12
 HYBRID_QUANTUM = 700  # live CPUs need real instruction windows
@@ -370,6 +442,7 @@ def main(out=print):
         f" ok={m['identical']}")
     o = run_trace_overhead()
     out(trace_line(o))
+    out(faults_line(run_faults()))
     wide = run_wide()
     wide_net = "x".join(str(s) for s in WIDE_SIZES)
     base = wide[0]
@@ -393,16 +466,48 @@ def trace_line(o):
             f" ok={o['identical']}")
 
 
+def faults_line(f):
+    mega_net = "x".join(str(s) for s in MEGA_SIZES)
+    fids = "/".join(f"{x:.3f}" for x in f["fidelity"])
+    rates = "/".join(f"{x:g}" for x in f["rates"])
+    return (f"faults/megaloop/{mega_net},{f['off_s']*1e6:.0f},"
+            f"fault_on_rps={f['on_rps']:.0f}"
+            f" fault_off_rps={f['off_rps']:.0f}"
+            f" overhead_pct={f['overhead_pct']:.1f}"
+            f" dropped={f['dropped']} duped={f['duped']}"
+            f" fidelity@{rates}={fids}"
+            f" rounds={f['rounds']} ok={f['identical']}")
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser(
         description="SNN benchmark section (see benchmarks/README.md)")
+    ap.add_argument("scenario", nargs="?", default="all",
+                    choices=("all", "faults", "trace"),
+                    help="run one scenario standalone (default: all)")
     ap.add_argument("--trace", action="store_true",
-                    help="run only the telemetry-overhead scenario "
+                    help="alias for the 'trace' scenario "
                          "(traced vs untraced megaloop, the <10%% claim)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any emitted line carries ok=False "
+                         "(CI smoke, mirrors benchmarks/run.py --check)")
     args = ap.parse_args()
-    if args.trace:
-        print(trace_line(run_trace_overhead()))
+    emitted = []
+
+    def _out(line):
+        print(line)
+        emitted.append(str(line))
+
+    if args.trace or args.scenario == "trace":
+        _out(trace_line(run_trace_overhead()))
+    elif args.scenario == "faults":
+        _out(faults_line(run_faults()))
     else:
-        main()
+        main(out=_out)
+    if args.check:
+        bad = [l for l in emitted if "ok=False" in l or "correct=False" in l]
+        if bad:
+            sys.exit("verification failed:\n" + "\n".join(bad))
+        print(f"# verification flags clean across {len(emitted)} lines")

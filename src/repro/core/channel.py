@@ -46,9 +46,13 @@ def box_append(box, mask, kind, dst, addr, data, t_emit):
 
     Masked appends scatter out-of-bounds and are dropped — never write a
     dead slot with stale values (duplicate scatter indices with different
-    values are nondeterministic in XLA)."""
+    values are nondeterministic in XLA).  Past-capacity appends are dropped
+    rather than clipped onto the last slot — the count still records true
+    demand, so the watermark catches the overflow loudly (or, under the
+    faults ``on_overflow="drop"`` policy, counts it as spike loss) without
+    ever corrupting the newest resident message."""
     cap = box["valid"].shape[0]
-    i = jnp.where(mask, jnp.clip(box["count"], 0, cap - 1), cap)
+    i = jnp.where(mask & (box["count"] < cap), box["count"], cap)
     sel = lambda f, v: box[f].at[i].set(jnp.asarray(v, jnp.int32), mode="drop")
     out = dict(box)
     out["kind"] = sel("kind", kind)
@@ -169,6 +173,15 @@ def merge_pending(pending, fresh):
     # the counter is exact even when the merge truncates (which trips the
     # max_count watermark anyway).  pack_pending dropped the field.
     out["routed_total"] = pending["routed_total"] + fresh["count"]
+    # spike-loss counter for the graceful-degradation overflow policy
+    # (faults.FaultConfig(on_overflow="drop")): how many messages the
+    # truncating merge actually discarded.  route() keeps exactly
+    # ``cap - base`` fresh lanes when demand exceeds the box, so the loss
+    # this merge is the demand past capacity.  Maintained unconditionally
+    # (it is one add) — the controller only *consults* it under the drop
+    # policy; under "raise" the max_count watermark aborts first.
+    out["lost_total"] = pending["lost_total"] + jnp.maximum(
+        base + fresh["count"] - cap, 0)
     return out
 
 
@@ -179,8 +192,8 @@ def inbox_overflowed(pending, cap: int):
     simulation state through jit/vmap/shard_map and the controller's
     device-resident megaloop, so overflow detection never needs a host
     round-trip.  True iff the merge ever needed more than ``cap`` slots —
-    past-cap messages are silently lost (bulk appends and merges truncate;
-    single ``box_append`` clips onto the last slot), so a tripped flag
+    past-cap messages are silently lost (bulk appends, merges, and single
+    ``box_append`` all drop past-capacity writes), so a tripped flag
     means messages were dropped or corrupted at some point, even if the
     box drained since.  The controller converts the flag into the loud
     ``RuntimeError`` host-side.
@@ -194,6 +207,7 @@ def empty_pending(cap: int):
     box["count"] = jnp.zeros((), jnp.int32)
     box["max_count"] = jnp.zeros((), jnp.int32)
     box["routed_total"] = jnp.zeros((), jnp.int32)  # lifetime routed msgs
+    box["lost_total"] = jnp.zeros((), jnp.int32)  # msgs lost to inbox overflow
     return box
 
 

@@ -177,8 +177,18 @@ class Controller:
                                 st, pen, cfg.in_cap, cfg.out_cap, cfg.store_log)
                         # the trace-overflow flag (6) is informational and
                         # never stops the loop: telemetry loss must not
-                        # change termination behavior (obs/trace.py)
-                        over = in_over | out_over | st_over | late
+                        # change termination behavior (obs/trace.py).  Under
+                        # the graceful-degradation overflow policy
+                        # (faults.FaultConfig(on_overflow="drop")) the
+                        # channel watermarks stop being fatal too — overflow
+                        # is counted spike loss and the run continues; the
+                        # program-bug flags (store log, late MMIO) still
+                        # abort.  Static branch: the policy is part of the
+                        # cached-function key, like every fault gate.
+                        if cfg.faults is not None and cfg.faults.drop_overflow:
+                            over = st_over | late
+                        else:
+                            over = in_over | out_over | st_over | late
                         return done & ~over, over
 
                     # cond, not where: non-check rounds skip the reductions
@@ -240,10 +250,14 @@ class Controller:
                     flat_valid = (all_out["valid"] & (all_out["dst"] == i)).reshape(-1)
                     rank = jnp.cumsum(flat_valid.astype(jnp.int32)) - 1
                     # dead lanes scatter out-of-bounds and drop (channel.py's
-                    # "never write a dead slot" rule) so an exactly-full
-                    # inbox keeps its last message instead of racing it
-                    # against thousands of zero writes to the same slot
-                    pos = jnp.where(flat_valid, jnp.clip(rank, 0, self.cfg.in_cap - 1), self.cfg.in_cap)
+                    # "never write a dead slot" rule); past-cap lanes drop
+                    # too — same drop-the-tail semantics as route(), so the
+                    # graceful-degradation overflow policy loses the
+                    # identical messages on this backend as on the others
+                    # (count below still records true demand for the
+                    # watermark and the lost_total accounting)
+                    pos = jnp.where(flat_valid & (rank < self.cfg.in_cap),
+                                    rank, self.cfg.in_cap)
                     fresh = ch.empty_pending(self.cfg.in_cap)
                     for f, src in (("kind", all_out["kind"]), ("addr", all_out["addr"]),
                                    ("data", all_out["data"]), ("t_avail", t_avail)):
@@ -319,16 +333,23 @@ class Controller:
         return self.pending
 
     @staticmethod
-    def _flag_detail(flag_name, values, cap):
+    def _flag_detail(flag_name, values, cap, kwarg=None):
         """Shared watermark formatter (both dispatch paths re-raise through
         ``_check_overflow``, so fused and per-round messages stay byte
         identical): names the tripped flag, the first segment past the cap,
-        and the cap itself, then the full per-segment watermark vector."""
+        and the cap itself, then the full per-segment watermark vector.
+
+        ``kwarg`` names the build()/build_snn keyword that sizes this cap;
+        the watermark records true demand, so its peak IS the smallest
+        capacity that would have absorbed the burst — the hint turns the
+        abort into a one-edit remediation."""
         values = np.asarray(values)
         seg = int(np.flatnonzero(values > cap)[0])
+        hint = "" if kwarg is None else (
+            f"; smallest sufficient {kwarg}={int(values.max())}")
         return (f"flag '{flag_name}' tripped first at segment {seg} "
                 f"({int(values[seg])} > cap {cap}; per-segment watermarks "
-                f"{values.tolist()})")
+                f"{values.tolist()}{hint})")
 
     def _check_overflow(self, pending=None, states=None):
         # loud overflow sentinels: merge_pending and the segment step keep
@@ -337,27 +358,31 @@ class Controller:
         # appends clip onto the last slot), so any watermark beyond capacity
         # means messages were dropped at some point — even if the box
         # drained since
+        # graceful degradation (faults.FaultConfig(on_overflow="drop")):
+        # inbox/outbox overflow is counted spike loss, not an abort — only
+        # the program-bug flags (store log, late MMIO) below stay fatal
+        drop = self.cfg.faults is not None and self.cfg.faults.drop_overflow
         pending = self._pending_stacked() if pending is None else pending
         watermark = np.asarray(pending["max_count"])
-        if (watermark > self.cfg.in_cap).any():
+        if not drop and (watermark > self.cfg.in_cap).any():
             raise RuntimeError(
                 "pending inbox overflow: "
-                f"{self._flag_detail('inbox', watermark, self.cfg.in_cap)}; "
+                f"{self._flag_detail('inbox', watermark, self.cfg.in_cap, 'in_cap')}; "
                 "raise in_cap (builder kwarg) or thin the workload's traffic"
             )
         states = self._stacked() if states is None else states
         out_peak = np.asarray(states["stats"]["outbox_peak"])
-        if (out_peak > self.cfg.out_cap).any():
+        if not drop and (out_peak > self.cfg.out_cap).any():
             raise RuntimeError(
                 "outbox overflow: "
-                f"{self._flag_detail('outbox', out_peak, self.cfg.out_cap)}; "
+                f"{self._flag_detail('outbox', out_peak, self.cfg.out_cap, 'out_cap')}; "
                 "raise out_cap (builder kwarg) or thin the workload's traffic"
             )
         store_peak = np.asarray(states["stats"]["store_peak"])
         if (store_peak > self.cfg.store_log).any():
             raise RuntimeError(
                 "DRAM store-log overflow: "
-                f"{self._flag_detail('store_log', store_peak, self.cfg.store_log)}"
+                f"{self._flag_detail('store_log', store_peak, self.cfg.store_log, 'store_log')}"
                 " stores in one quantum; raise store_log "
                 "(builder kwarg) or shrink the quantum"
             )
@@ -389,7 +414,8 @@ class Controller:
         d, in_over, out_over, store_over, mmio_late, _trace_over = np.asarray(
             self._flags_fn(self._stacked(), self._pending_stacked())
         )
-        if in_over or out_over or store_over or mmio_late:
+        drop = self.cfg.faults is not None and self.cfg.faults.drop_overflow
+        if ((in_over or out_over) and not drop) or store_over or mmio_late:
             self._check_overflow()  # raises with the detailed watermark message
         return bool(d)
 

@@ -198,7 +198,7 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
           scratch_init=None, cim_init=None, channel_latency: int = 10_000,
           local_latency: int = 64, use_kernel: bool = False,
           in_cap: int | None = None, out_cap: int | None = None,
-          store_log: int | None = None):
+          store_log: int | None = None, faults=None, fault_uids=None):
     """Assemble the stacked simulation state.
 
     programs: {seg_id: asm_source or np.uint32 array}
@@ -215,6 +215,15 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
         lever on small platforms' round cost; undersizing raises the loud
         sticky-watermark RuntimeError, never silently corrupts, and results
         are bit-identical across any caps that don't overflow.
+    faults: ``repro.faults.FaultConfig`` or None (default).  Seeds the
+        device-resident fault model: structural crossbar/neuron fault sites
+        are drawn here per unit (host-side, placement-invariant) and baked
+        into the stacked state; transport/overflow behaviour is compiled
+        into the step via the static VPConfig field.  None compiles the
+        whole subsystem out, bit-identical to a fault-free build.
+    fault_uids: {global_cim_id: stable_uid} — placement-invariant unit
+        identities for the fault PRNG (build_snn passes logical
+        layer/stripe/tile coordinates).  Defaults to the global cim id.
     """
     assert channel_latency >= local_latency, \
         "intra-segment hops cannot be slower than cross-segment channels"
@@ -282,6 +291,7 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
         snn_fanout=snn_fanout,
         snn_grouped=snn_grouped,
         snn_tick_period=snn_tick_period,
+        faults=faults,
     )
     states = []
     for s, d in enumerate(descs):
@@ -314,6 +324,25 @@ def build(descs, *, programs=None, dram_words=None, crossbars=None,
             cims["weights"] = cims["weights"].at[k].set(jnp.asarray(w))
         for f, val in (cim_init or {}).get(g, {}).items():
             cims[f] = cims[f].at[k].set(jnp.asarray(val, cims[f].dtype))
+        if faults is not None:
+            from repro import faults as flt
+
+            uid = (fault_uids or {}).get(g, g)
+            if faults.has_transport_faults:
+                cims["f_uid"] = cims["f_uid"].at[k].set(uid)
+            if faults.has_xbar_faults or faults.has_neuron_faults:
+                # structural sites are confined to the unit's programmed
+                # region — a fault outside it would charge ghost neurons
+                rows, cols = (np.asarray(crossbars[g]).shape
+                              if crossbars and g in crossbars else (0, 0))
+                masks = flt.unit_masks(faults, uid, rows, cols,
+                                       cims["weights"].shape[-1])
+                if faults.has_xbar_faults:
+                    cims["f_and"] = cims["f_and"].at[k].set(masks["f_and"])
+                    cims["f_xor"] = cims["f_xor"].at[k].set(masks["f_xor"])
+                if faults.has_neuron_faults:
+                    cims["f_dead"] = cims["f_dead"].at[k].set(masks["f_dead"])
+                    cims["f_dth"] = cims["f_dth"].at[k].set(masks["f_dth"])
         states[s]["cims"] = cims
 
     if dram_words is not None:

@@ -1,0 +1,319 @@
+"""Device-resident fault injection for the neuromorphic VP.
+
+Real CIM crossbars are analog devices: stuck-at cells, conductance drift,
+dead neurons, and dropped AER events are the non-idealities an architect
+budgets for before silicon.  This package turns every existing workload
+into a resilience benchmark: ``build()/build_snn(faults=FaultConfig(...))``
+injects seeded, deterministic faults *inside* the jitted megaloop, and
+``faults=None`` compiles the whole subsystem out (the ``obs=None`` pattern
+— the config is a static field of ``VPConfig``, so it keys the function
+cache and every fault branch is resolved at trace time).
+
+Three hardware layers, three fault families:
+
+**Crossbar faults** (structural, frozen at build time): stuck-at-0 /
+stuck-at-1 cells, per-cell bit flips, and whole row/column failures are
+compiled into two masks per unit — ``w_eff = (w & f_and) ^ f_xor`` — and
+applied at *read* time inside ``kernels/crossbar_vmm`` and
+``kernels/lif_step`` (ref, Pallas kernel, and ops wrappers all take the
+same masks, so oracle and kernel agree bit-exactly).  Masking at read time
+rather than baking faulted weights means reprogramming a crossbar row over
+MMIO (``CIM_REG_WROW``) cannot heal a stuck cell — exactly like hardware.
+
+**Neuron faults** (structural): dead neurons (never fire, membrane pinned
+to 0) and per-neuron threshold drift (a signed offset added to the
+programmed threshold, clamped >= 1), applied in the LIF update and,
+symmetrically, in the VP's termination predicate so a drifted/dead network
+still quiesces correctly.
+
+**Transport faults** (dynamic, decided per spike event): seeded drop /
+duplication of AER spike messages at the consumption point, plus the
+graceful-degradation overflow policy ``on_overflow="drop"`` that converts
+the inbox/outbox watermark from a fatal ``RuntimeError`` into counted,
+traced spike loss.
+
+Determinism contract
+--------------------
+Dynamic fault decisions hash *simulation coordinates*, never execution
+order: a spike's fate is ``hash(seed, unit_uid, axon, tick)`` where
+``unit_uid`` is a placement-invariant unit identity and ``tick`` is the
+LIF tick that consumes the spike.  Those coordinates are identical across
+all four backends, every segmentation, every quantum, and fused vs
+per-round dispatch — so a fixed seed yields bit-identical fault sites and
+results everywhere (the conformance suite pins this).  The hash is a
+counter-based PRNG (a murmur3-style 32-bit finalizer): statistically flat,
+trivially reproducible, and stateless-by-coordinates; the seed itself
+rides the megaloop carry as per-segment state so injection lives entirely
+on device.  Thresholding the *same* hash at different rates makes drop
+sets nested (common random numbers): raising ``p_spike_drop`` only ever
+drops a superset of spikes, which is what makes degradation curves
+near-monotone instead of noisy.
+
+Structural fault sites are drawn host-side at build from
+``numpy.random.default_rng(hash(seed, unit_uid))`` — again keyed by unit
+identity, not placement, so re-segmenting the same network faults the
+same cells.
+
+See docs/faults.md for the full model and ``degradation_sweep`` for the
+accuracy-vs-fault-rate driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "FaultConfig",
+    "hash_u32",
+    "unit_masks",
+    "fidelity",
+    "degradation_sweep",
+]
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Seeded fault model for one platform build.  Frozen + hashable: it is
+    carried as a static field of ``VPConfig``, keys the controller's
+    function cache, and every ``faults is None`` / rate-is-zero branch is
+    resolved at trace time (zero cost when off).
+
+    Rates are probabilities in [0, 1].  Structural rates (crossbar +
+    neuron) are sampled once at build per unit; transport rates are
+    evaluated per spike event on device.
+
+    on_overflow:
+      "raise" — (default) channel/store watermark trips abort the run with
+                an actionable RuntimeError, exactly as without faults;
+      "drop"  — inbox/outbox overflow becomes graceful degradation: excess
+                spikes are discarded deterministically (highest-slack
+                first, identically on every backend), counted in
+                ``lost_total`` / ``outbox_lost`` and traced as
+                ``spikes_dropped`` events.  Store-log overflow and late
+                MMIO stay fatal — those are program bugs, not load.
+    """
+
+    seed: int = 0
+    # -- crossbar (per cell / row / column, sampled at build) --
+    p_stuck0: float = 0.0      # cell conductance stuck at zero
+    p_stuck1: float = 0.0      # cell stuck at full-scale (int8 -1 pattern)
+    p_bitflip: float = 0.0     # one random weight bit inverted per cell
+    p_row_fail: float = 0.0    # whole wordline dead (row reads as 0)
+    p_col_fail: float = 0.0    # whole bitline dead (column reads as 0)
+    # -- neuron (per LIF row, sampled at build) --
+    p_dead: float = 0.0        # neuron never fires, membrane pinned to 0
+    p_thresh_drift: float = 0.0  # neuron's threshold drifts by +-drift_max
+    thresh_drift_max: int = 4  # uniform in [-max, +max], clamped >= 1 total
+    # -- transport (per spike event, decided on device) --
+    p_spike_drop: float = 0.0  # AER spike silently lost in flight
+    p_spike_dup: float = 0.0   # AER spike delivered twice (charge doubled)
+    on_overflow: str = "raise"  # "raise" | "drop"
+
+    def __post_init__(self):
+        for f in ("p_stuck0", "p_stuck1", "p_bitflip", "p_row_fail",
+                  "p_col_fail", "p_dead", "p_thresh_drift",
+                  "p_spike_drop", "p_spike_dup"):
+            v = getattr(self, f)
+            if not 0.0 <= float(v) <= 1.0:
+                raise ValueError(f"FaultConfig.{f}={v!r}: rate must be in [0, 1]")
+        if self.on_overflow not in ("raise", "drop"):
+            raise ValueError(
+                f"FaultConfig.on_overflow={self.on_overflow!r}: "
+                "expected 'raise' or 'drop'")
+
+    # static trace-time gates: which state arrays exist / which code paths
+    # are stitched into the compiled step
+    @property
+    def has_xbar_faults(self) -> bool:
+        return (self.p_stuck0 > 0 or self.p_stuck1 > 0 or self.p_bitflip > 0
+                or self.p_row_fail > 0 or self.p_col_fail > 0)
+
+    @property
+    def has_neuron_faults(self) -> bool:
+        return self.p_dead > 0 or self.p_thresh_drift > 0
+
+    @property
+    def has_transport_faults(self) -> bool:
+        return self.p_spike_drop > 0 or self.p_spike_dup > 0
+
+    @property
+    def drop_overflow(self) -> bool:
+        return self.on_overflow == "drop"
+
+
+# ---------------------------------------------------------------------------
+# counter-based PRNG: hash simulation coordinates -> uint32
+# ---------------------------------------------------------------------------
+
+def hash_u32(*keys):
+    """Murmur3-style finalizer over integer keys -> uniform uint32.
+
+    Works on scalars and jnp arrays alike (numpy semantics with wraparound
+    via explicit uint32 casts).  The decision for a spike event is
+    ``hash_u32(seed, uid, axon, tick) < p * 2**32`` — pure coordinates, no
+    sequence state, hence identical on every backend / dispatch shape.
+    """
+    import jax.numpy as jnp
+
+    h = jnp.uint32(_GOLDEN)
+    for k in keys:
+        h = (h ^ jnp.asarray(k).astype(jnp.uint32)) * jnp.uint32(_C1)
+        h = h ^ (h >> 13)
+        h = h * jnp.uint32(_C2)
+        h = h ^ (h >> 16)
+    return h
+
+
+def threshold_u32(p: float) -> int:
+    """Acceptance threshold for ``hash_u32(...) < threshold_u32(p)``.
+
+    Plain Python int (fits uint32); comparing the *same* hash against
+    thresholds for increasing p yields nested event sets (CRN), which keeps
+    degradation curves monotone."""
+    return min(int(float(p) * 4294967296.0), 4294967295)
+
+
+def _host_hash(*keys) -> int:
+    """Host-side uint32 hash (same function as hash_u32, numpy scalars)."""
+    h = int(_GOLDEN)
+    for k in keys:
+        h = ((h ^ (int(k) & 0xFFFFFFFF)) * int(_C1)) & 0xFFFFFFFF
+        h ^= h >> 13
+        h = (h * int(_C2)) & 0xFFFFFFFF
+        h ^= h >> 16
+    return h
+
+
+# ---------------------------------------------------------------------------
+# structural fault sites (host-side, at build)
+# ---------------------------------------------------------------------------
+
+def unit_masks(fc: FaultConfig, uid: int, rows: int, cols: int, xbar: int):
+    """Draw one unit's structural fault sites; returns a dict of numpy
+    arrays shaped to the full crossbar (``xbar`` x ``xbar``):
+
+      f_and  int8  (xbar, xbar) — AND mask: 0 where stuck-at-0/row/col dead
+      f_xor  int8  (xbar, xbar) — XOR mask: stuck-at-1 pattern + bit flips
+      f_dead bool  (xbar,)      — dead neurons (LIF rows)
+      f_dth  int32 (xbar,)      — per-neuron threshold drift offsets
+
+    ``w_eff = (w & f_and) ^ f_xor`` composes every crossbar fault: stuck-0
+    and row/column failures clear bits via AND; stuck-at-1 first clears the
+    cell (AND 0) then XORs in the full-scale pattern, so reprogramming the
+    weight cannot change a stuck cell's effective value; bit flips XOR one
+    random bit.  Faults land only inside the unit's configured
+    ``rows x cols`` region — a stuck-at-1 outside it would charge ghost
+    neurons the network never wired.
+
+    Seeded from ``(fc.seed, uid)`` where uid is placement-invariant, so the
+    same logical unit faults identically under every segmentation.
+    """
+    rng = np.random.default_rng(_host_hash(fc.seed, uid, 0x5EED))
+    f_and = np.full((xbar, xbar), -1, np.int8)   # all bits set
+    f_xor = np.zeros((xbar, xbar), np.int8)
+    f_dead = np.zeros((xbar,), bool)
+    f_dth = np.zeros((xbar,), np.int32)
+    r, c = int(rows), int(cols)
+    if r > 0 and c > 0:
+        u = rng.random((r, c))
+        stuck0 = u < fc.p_stuck0
+        stuck1 = (u >= fc.p_stuck0) & (u < fc.p_stuck0 + fc.p_stuck1)
+        flip = rng.random((r, c)) < fc.p_bitflip
+        row_dead = rng.random(r) < fc.p_row_fail
+        col_dead = rng.random(c) < fc.p_col_fail
+        dead_cell = stuck0 | row_dead[:, None] | col_dead[None, :]
+        a = np.where(dead_cell | stuck1, 0, -1).astype(np.int8)
+        x = np.where(stuck1 & ~dead_cell, -1, 0).astype(np.int8)
+        bits = (1 << rng.integers(0, 8, (r, c))).astype(np.int64)
+        x = (x.astype(np.int64) ^ np.where(flip, bits, 0)).astype(np.int8)
+        f_and[:r, :c] = a
+        f_xor[:r, :c] = x
+        f_dead[:r] = rng.random(r) < fc.p_dead
+        drift = rng.integers(-fc.thresh_drift_max, fc.thresh_drift_max + 1, r)
+        f_dth[:r] = np.where(rng.random(r) < fc.p_thresh_drift, drift, 0)
+    return {"f_and": f_and, "f_xor": f_xor, "f_dead": f_dead, "f_dth": f_dth}
+
+
+def apply_masks(weights, f_and, f_xor):
+    """``w_eff = (w & f_and) ^ f_xor`` — the read-time crossbar fault view
+    (jnp or numpy, int8 in / int8 out)."""
+    return (weights & f_and) ^ f_xor
+
+
+# ---------------------------------------------------------------------------
+# degradation metric + sweep driver
+# ---------------------------------------------------------------------------
+
+def fidelity(counts, expected) -> float:
+    """Output fidelity in [0, 1]: 1 - L1(counts, expected) / L1(expected).
+
+    1.0 means the faulted run reproduced the fault-free oracle's output
+    spike counts exactly; 0.0 means the error mass matched or exceeded the
+    oracle's total output activity.  Deliberately coarse — it is a
+    *degradation* metric for sweeps, not a task accuracy."""
+    counts = np.asarray(counts, np.int64)
+    expected = np.asarray(expected, np.int64)
+    denom = max(int(np.abs(expected).sum()), 1)
+    err = int(np.abs(counts - expected).sum())
+    return max(0.0, 1.0 - err / denom)
+
+
+def degradation_sweep(job, rates, *, fault_kind="transport", seed=0,
+                      strategy="uniform", n_segments=2, n_units=None,
+                      backend="vmap", quantum=32, max_rounds=2000,
+                      check_every=2, fused=True, on_overflow="raise",
+                      base=None, **build_kw):
+    """Accuracy-vs-fault-rate curve for an SNN job: for each rate build the
+    platform with a ``FaultConfig`` scaled to that rate, run it to
+    completion, and score output fidelity against the job's fault-free
+    oracle expectations.
+
+    fault_kind selects which rate axis sweeps:
+      "transport" — p_spike_drop = rate (AER events lost in flight)
+      "crossbar"  — p_stuck0 = rate     (synapse cells stuck at zero)
+      "neuron"    — p_dead = rate       (LIF neurons dead)
+    ``base`` (a FaultConfig) seeds every other field — e.g. pass
+    ``FaultConfig(on_overflow="drop")`` to sweep under graceful overflow.
+
+    Returns a list of dicts, one per rate:
+      ``{"rate", "fidelity", "total_spikes", "rounds", "counts"}``
+    Fidelity at rate 0.0 is exact (1.0) by the conformance guarantee; the
+    nested-CRN hash makes the transport curve near-monotone in rate.
+    """
+    from repro import snn
+    from repro.core.controller import Controller
+
+    base = base or FaultConfig()
+    field = {"transport": "p_spike_drop", "crossbar": "p_stuck0",
+             "neuron": "p_dead"}[fault_kind]
+    if n_units is None:
+        n_units = snn.n_units_for(job.layers)
+    descs = snn.segmentation_for(n_units, strategy, n_segments=n_segments)
+    out = []
+    for rate in rates:
+        fc = dataclasses.replace(base, seed=seed, on_overflow=on_overflow,
+                                 **{field: float(rate)})
+        if not (fc.has_xbar_faults or fc.has_neuron_faults
+                or fc.has_transport_faults or fc.drop_overflow):
+            fc = None  # rate 0 with default policy: compile faults out
+        cfg, states, pending, meta = snn.build_snn(
+            job.layers, descs, job.raster, edges=job.edges,
+            n_ticks=job.n_ticks, faults=fc, **build_kw)
+        ctl = Controller(cfg, states, pending, backend=backend,
+                         quantum=quantum)
+        rounds, _ = ctl.run(max_rounds=max_rounds, check_every=check_every,
+                            fused=fused)
+        counts = snn.output_spike_counts(ctl.result_states(), meta)
+        out.append({
+            "rate": float(rate),
+            "fidelity": fidelity(counts, job.expected_counts),
+            "total_spikes": int(snn.total_spikes(ctl.result_states())),
+            "rounds": int(rounds),
+            "counts": np.asarray(counts, np.int64),
+        })
+    return out

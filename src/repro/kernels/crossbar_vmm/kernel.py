@@ -29,6 +29,22 @@ def _kernel(x_ref, w_ref, o_ref, *, in_res: int, out_res: int):
     """x (TILE_B, C) int32; w (C, TILE_R) int8 -> o (TILE_B, TILE_R) int32."""
     x = x_ref[...]
     w = w_ref[...].astype(jnp.float32)
+    _vmm_body(x, w, o_ref, in_res, out_res)
+
+
+def _kernel_faults(x_ref, w_ref, a_ref, f_ref, o_ref, *, in_res: int,
+                   out_res: int):
+    """Fault-injecting variant (repro.faults): the crossbar reads through
+    the AND/XOR masks — ``(w & a) ^ f`` in int8 before the fp32 promotion —
+    modeling stuck-at / bit-flip / row / column failures at read time.
+    a/f (C, TILE_R) int8; neutral masks (a = -1, f = 0) reproduce
+    ``_kernel`` bit-exactly."""
+    x = x_ref[...]
+    w = ((w_ref[...] & a_ref[...]) ^ f_ref[...]).astype(jnp.float32)
+    _vmm_body(x, w, o_ref, in_res, out_res)
+
+
+def _vmm_body(x, w, o_ref, in_res: int, out_res: int):
     lo = -(1 << (in_res - 1))
     hi = (1 << (in_res - 1)) - 1
     xq = jnp.clip(x, lo, hi)
@@ -45,29 +61,40 @@ def _kernel(x_ref, w_ref, o_ref, *, in_res: int, out_res: int):
 
 
 @functools.partial(jax.jit, static_argnames=("in_res", "out_res", "interpret"))
-def crossbar_vmm_tiles(x, weights, in_res: int = 8, out_res: int = 8, interpret: bool = True):
+def crossbar_vmm_tiles(x, weights, in_res: int = 8, out_res: int = 8,
+                       f_and=None, f_xor=None, interpret: bool = True):
     """x (B, C) int32, weights int8 (R, C) -> (B, R) int32.
 
     B and R are padded to tile multiples; C (the contraction) stays whole —
     a 256-deep contraction fits VMEM comfortably (256×128 int8 = 32 KB/tile).
+
+    ``f_and`` / ``f_xor`` (int8 (R, C), optional, repro.faults): crossbar
+    read-time fault masks, padded and transposed exactly like the weights;
+    None runs the unfaulted kernel unchanged.
     """
     b, c = x.shape
     r = weights.shape[0]
     bp = -(-b // TILE_B) * TILE_B
     rp = -(-r // TILE_R) * TILE_R
     xp = jnp.pad(x, ((0, bp - b), (0, 0)))
-    wp = jnp.pad(weights, ((0, rp - r), (0, 0))).T  # (C, Rp)
+    pad_w = lambda w: jnp.pad(w, ((0, rp - r), (0, 0))).T  # (C, Rp)
+    wp = pad_w(weights)
 
     grid = (bp // TILE_B, rp // TILE_R)
+    w_spec = pl.BlockSpec((c, TILE_R), lambda i, j: (0, j))
+    in_specs = [pl.BlockSpec((TILE_B, c), lambda i, j: (i, 0)), w_spec]
+    operands = [xp, wp]
+    kernel = _kernel
+    if f_and is not None:
+        kernel = _kernel_faults
+        in_specs += [w_spec, w_spec]
+        operands += [pad_w(f_and), pad_w(f_xor)]
     out = pl.pallas_call(
-        functools.partial(_kernel, in_res=in_res, out_res=out_res),
+        functools.partial(kernel, in_res=in_res, out_res=out_res),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((TILE_B, c), lambda i, j: (i, 0)),
-            pl.BlockSpec((c, TILE_R), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((TILE_B, TILE_R), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bp, rp), jnp.int32),
         interpret=interpret,
-    )(xp, wp)
+    )(*operands)
     return out[:b, :r]

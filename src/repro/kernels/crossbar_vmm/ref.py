@@ -33,14 +33,21 @@ def adc_saturate(acc, out_res: int, headroom_bits: int = 8):
     return jnp.clip(acc, -hi - 1, hi)
 
 
-def crossbar_vmm(weights, x, in_res: int = 8, out_res: int = 8):
+def crossbar_vmm(weights, x, in_res: int = 8, out_res: int = 8,
+                 f_and=None, f_xor=None):
     """weights int8 (R, C); x int32 (C,) -> int32 (R,).
 
     Bit-exact model of the analog pipeline: identical result to
     ``clip(W @ clip(x))`` because the bit-serial accumulation is exact —
     the decomposition is still modeled explicitly so the kernel and the
     oracle share structure (and tests can probe per-slice equivalence).
+
+    ``f_and`` / ``f_xor`` (int8 (R, C), optional) are the crossbar fault
+    masks (repro.faults): the array drives ``(w & f_and) ^ f_xor`` — the
+    read-time view of stuck-at / bit-flip / row / column failures.
     """
+    if f_and is not None:
+        weights = (weights & f_and) ^ f_xor
     xq = quantize_dac(x, in_res)
     sign = jnp.sign(xq).astype(jnp.int32)
     mag = jnp.abs(xq).astype(jnp.int32)
@@ -51,9 +58,13 @@ def crossbar_vmm(weights, x, in_res: int = 8, out_res: int = 8):
     return adc_saturate(acc, out_res)
 
 
-def crossbar_vmm_batch(weights, x, in_res: int = 8, out_res: int = 8):
-    """weights (U, R, C) int8; x (U, C) int32 -> (U, R) int32."""
-    return jax.vmap(lambda w, v: crossbar_vmm(w, v, in_res, out_res))(weights, x)
+def crossbar_vmm_batch(weights, x, in_res: int = 8, out_res: int = 8,
+                       f_and=None, f_xor=None):
+    """weights (U, R, C) int8; x (U, C) int32 -> (U, R) int32; optional
+    per-unit fault masks f_and/f_xor int8 (U, R, C)."""
+    return jax.vmap(
+        lambda w, v, a, f: crossbar_vmm(w, v, in_res, out_res, a, f)
+    )(weights, x, f_and, f_xor)
 
 
 def crossbar_matmul(weights, x, in_res: int = 8, out_res: int = 8):

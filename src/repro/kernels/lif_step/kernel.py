@@ -52,19 +52,57 @@ def _kernel(s_ref, w_ref, x_ref, v_ref, r_ref, th_ref, lk_ref, rp_ref,
     so_ref[...] = fired.astype(jnp.int32)
 
 
+def _kernel_faults(s_ref, w_ref, a_ref, f_ref, x_ref, v_ref, r_ref, th_ref,
+                   lk_ref, rp_ref, dd_ref, dt_ref, vo_ref, ro_ref, so_ref):
+    """Fault-injecting variant of ``_kernel`` (repro.faults): the crossbar
+    reads through the AND/XOR masks — ``(w & a) ^ f`` in int8 before the
+    fp32 promotion — dead lanes (dd != 0) are gated out of integration and
+    firing with the membrane pinned to 0, and the threshold drifts per
+    neuron (``max(th + dt, 1)``).  Same VMEM-resident fusion; neutral
+    masks (a = -1, f = 0, dd = dt = 0) reproduce ``_kernel`` bit-exactly,
+    which is what lets one variant serve every fault-family combination.
+
+    a/f (1, C, TILE_R) int8; dd/dt (1, TILE_R) int32; rest as ``_kernel``.
+    """
+    s = jnp.clip(s_ref[...], -SPIKE_SAT, SPIKE_SAT).astype(jnp.float32)
+    w = ((w_ref[0] & a_ref[0]) ^ f_ref[0]).astype(jnp.float32)  # (C, TILE_R)
+    syn = jax.lax.dot(s, w, preferred_element_type=jnp.float32).astype(jnp.int32)
+    syn = syn + x_ref[...]
+    v = v_ref[...]
+    refrac = r_ref[...]
+    thresh, leak, rp = th_ref[0], lk_ref[0], rp_ref[0]
+    dead = dd_ref[...] != 0
+    active = (refrac == 0) & ~dead
+    th_eff = jnp.maximum(thresh + dt_ref[...], 1)
+    v1 = jnp.maximum(v + jnp.where(active, syn, 0) - leak, 0)
+    fired = active & (v1 >= th_eff)
+    vo_ref[...] = jnp.where(dead, 0, jnp.where(fired, 0, v1))
+    ro_ref[...] = jnp.where(fired, rp, jnp.maximum(refrac - 1, 0))
+    so_ref[...] = fired.astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def lif_step_tiles(weights, spikes, v, refrac, thresh, leak, refrac_period,
-                   extra=None, interpret: bool = True):
+                   extra=None, f_and=None, f_xor=None, dead=None, dth=None,
+                   interpret: bool = True):
     """weights (U, R, C) int8; spikes (U, C) int32; v/refrac (U, R) int32;
     thresh/leak/refrac_period (U,) int32; extra (U, R) int32 or None
     -> (v', refrac', fired) each (U, R).
 
     R is padded to the tile multiple; C (the contraction) stays whole — a
     256-deep fan-in fits VMEM comfortably (256×128 int8 = 32 KB/tile).
+
+    Fault inputs (repro.faults, all optional): f_and/f_xor int8 (U, R, C)
+    crossbar read masks, dead bool (U, R), dth int32 (U, R).  When any is
+    given the fault kernel variant runs with neutral values substituted
+    for the absent ones (bit-identical semantics for those stages); when
+    all are None the original kernel runs untouched.
     """
     u, r, c = weights.shape
     rp_pad = -(-r // TILE_R) * TILE_R
-    wt = jnp.pad(weights, ((0, 0), (0, rp_pad - r), (0, 0))).transpose(0, 2, 1)  # (U, C, Rp)
+    pad_w = lambda x: jnp.pad(
+        x, ((0, 0), (0, rp_pad - r), (0, 0))).transpose(0, 2, 1)  # (U, C, Rp)
+    wt = pad_w(weights)
     pad_r = lambda x: jnp.pad(x, ((0, 0), (0, rp_pad - r)))
     vp, rfp = pad_r(v), pad_r(refrac)
     if extra is None:
@@ -73,32 +111,43 @@ def lif_step_tiles(weights, spikes, v, refrac, thresh, leak, refrac_period,
     # padded neurons must never fire: give the pad lanes an unreachable
     # threshold by masking v to 0 (thresh >= 1 contract) — v pad is 0 and
     # syn pad is 0 (zero weights + zero extra), so fired_pad = (0 >= thresh)
-    # = False.
+    # = False.  (Fault pads are neutral-0: masked pad weight is
+    # (0 & 0) ^ 0 = 0 and dth pad 0 keeps th_eff = thresh >= 1.)
 
     grid = (u, rp_pad // TILE_R)
+    tile_spec = pl.BlockSpec((1, TILE_R), lambda i, j: (i, j))
+    unit_spec = pl.BlockSpec((1,), lambda i, j: (i,))
+    w_spec = pl.BlockSpec((1, c, TILE_R), lambda i, j: (i, 0, j))
+    in_specs = [
+        pl.BlockSpec((1, c), lambda i, j: (i, 0)),
+        w_spec,
+        tile_spec, tile_spec, tile_spec,
+        unit_spec, unit_spec, unit_spec,
+    ]
+    operands = [spikes, wt, xp, vp, rfp, thresh, leak, refrac_period]
+    kernel = _kernel
+    if any(x is not None for x in (f_and, f_xor, dead, dth)):
+        kernel = _kernel_faults
+        fa = pad_w(jnp.full((u, r, c), -1, jnp.int8) if f_and is None
+                   else f_and)
+        fx = pad_w(jnp.zeros((u, r, c), jnp.int8) if f_xor is None else f_xor)
+        dd = pad_r(jnp.zeros((u, r), jnp.int32) if dead is None
+                   else dead.astype(jnp.int32))
+        dt = pad_r(jnp.zeros((u, r), jnp.int32) if dth is None
+                   else dth.astype(jnp.int32))
+        in_specs = in_specs[:2] + [w_spec, w_spec] + in_specs[2:] + \
+            [tile_spec, tile_spec]
+        operands = operands[:2] + [fa, fx] + operands[2:] + [dd, dt]
     out = pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, c), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, c, TILE_R), lambda i, j: (i, 0, j)),
-            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
-            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
-            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
-            pl.BlockSpec((1,), lambda i, j: (i,)),
-            pl.BlockSpec((1,), lambda i, j: (i,)),
-            pl.BlockSpec((1,), lambda i, j: (i,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
-            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
-            pl.BlockSpec((1, TILE_R), lambda i, j: (i, j)),
-        ],
+        in_specs=in_specs,
+        out_specs=[tile_spec, tile_spec, tile_spec],
         out_shape=[
             jax.ShapeDtypeStruct((u, rp_pad), jnp.int32),
             jax.ShapeDtypeStruct((u, rp_pad), jnp.int32),
             jax.ShapeDtypeStruct((u, rp_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(spikes, wt, xp, vp, rfp, thresh, leak, refrac_period)
+    )(*operands)
     return out[0][:, :r], out[1][:, :r], out[2][:, :r]

@@ -13,17 +13,22 @@ INTERPRET = True  # CPU container: no TPU lowering available
 
 
 def lif_step_units(weights, spikes, v, refrac, thresh, leak, refrac_period,
-                   extra=None):
+                   extra=None, f_and=None, f_xor=None, dead=None, dth=None):
     """Batched over units: weights (U, R, C) int8; spikes (U, C) int32;
     v/refrac (U, R) int32; thresh/leak/refrac_period (U,) int32;
     extra (U, R) int32 or None (merged charge from a wide layer's other
     column tiles) -> (v', refrac', fired) each (U, R) int32.
 
+    ``f_and``/``f_xor``/``dead``/``dth`` are the optional fault-injection
+    inputs (repro.faults; see kernel.py) — None selects the unfaulted
+    kernel unchanged.
+
     Used by the spike-mode CIM tick (vp/cim.py) when the platform is built
     with ``use_kernel=True``.
     """
     return lif_step_tiles(weights, spikes, v, refrac, thresh, leak,
-                          refrac_period, extra, interpret=INTERPRET)
+                          refrac_period, extra, f_and, f_xor, dead, dth,
+                          interpret=INTERPRET)
 
 
 def lif_step(weights, spikes, v, refrac, thresh, leak, refrac_period):

@@ -28,33 +28,51 @@ SPIKE_SAT = 511  # per-axon per-tick fan-in saturation (9 bits): keeps
                  # int32 oracle (the AER analogue of the DAC input clamp)
 
 
-def syn_charge(weights, spikes):
+def syn_charge(weights, spikes, f_and=None, f_xor=None):
     """Synaptic accumulation alone: int8 (R, C) crossbar × int32 (C,) spike
     counts -> int32 (R,) charge, with the same fan-in saturation the fused
     step applies.  Column tiles of a multi-crossbar layer compute this and
     forward it to the stripe owner (vp/cim.py snn_tick); because the clip is
     element-wise and the int32 contraction distributes over column blocks,
     the tiled sum is bit-identical to one full-width contraction.
+
+    ``f_and`` / ``f_xor`` (int8 (R, C), optional) are the crossbar fault
+    masks (repro.faults): the contraction reads ``(w & f_and) ^ f_xor``
+    instead of ``w``, so stuck/flipped cells fault at *read* time and
+    reprogramming the row cannot heal them.
     """
+    if f_and is not None:
+        weights = (weights & f_and) ^ f_xor
     spikes = jnp.clip(spikes, -SPIKE_SAT, SPIKE_SAT)
     return weights.astype(jnp.int32) @ spikes.astype(jnp.int32)
 
 
-def lif_update(syn, v, refrac, thresh, leak, refrac_period):
+def lif_update(syn, v, refrac, thresh, leak, refrac_period,
+               dead=None, dth=None):
     """Post-contraction LIF stages (leak / threshold / reset / refractory)
     on a precomputed charge vector ``syn`` int32 (R,).  Split out so callers
     that already hold the charge — the grouped spike-mode tick sums column
-    tiles' partial contractions — never pay the synapse matmul twice."""
+    tiles' partial contractions — never pay the synapse matmul twice.
+
+    Neuron faults (repro.faults, optional): ``dead`` bool (R,) pins a
+    neuron's membrane to 0 and gates it out of integration and firing;
+    ``dth`` int32 (R,) drifts the firing threshold per neuron (effective
+    threshold clamped >= 1, mirroring the CIM_REG_MODE clamp)."""
     active = refrac == 0
+    if dead is not None:
+        active = active & ~dead
+    th_eff = thresh if dth is None else jnp.maximum(thresh + dth, 1)
     v1 = jnp.maximum(v + jnp.where(active, syn, 0) - leak, 0)
-    fired = active & (v1 >= thresh)
+    fired = active & (v1 >= th_eff)
     v_out = jnp.where(fired, 0, v1)
+    if dead is not None:
+        v_out = jnp.where(dead, 0, v_out)
     refrac_out = jnp.where(fired, refrac_period, jnp.maximum(refrac - 1, 0))
     return v_out, refrac_out, fired.astype(jnp.int32)
 
 
 def lif_step(weights, spikes, v, refrac, thresh, leak, refrac_period,
-             extra=None):
+             extra=None, f_and=None, f_xor=None, dead=None, dth=None):
     """weights int8 (R, C); spikes int32 (C,); v/refrac int32 (R,);
     thresh/leak/refrac_period int32 scalars -> (v', refrac', fired int32 (R,)).
 
@@ -62,20 +80,23 @@ def lif_step(weights, spikes, v, refrac, thresh, leak, refrac_period,
     into the accumulation stage — the merged contribution of a wide layer's
     other column tiles.  It obeys the same refractory gate as the local
     crossbar's charge.
+
+    ``f_and``/``f_xor``/``dead``/``dth`` are the optional fault-injection
+    inputs (see ``syn_charge`` / ``lif_update``); None compiles them out.
     """
-    syn = syn_charge(weights, spikes)
+    syn = syn_charge(weights, spikes, f_and, f_xor)
     if extra is not None:
         syn = syn + extra
-    return lif_update(syn, v, refrac, thresh, leak, refrac_period)
+    return lif_update(syn, v, refrac, thresh, leak, refrac_period, dead, dth)
 
 
 def lif_step_units(weights, spikes, v, refrac, thresh, leak, refrac_period,
-                   extra=None):
+                   extra=None, f_and=None, f_xor=None, dead=None, dth=None):
     """Batched over units: weights (U, R, C) int8; spikes (U, C) int32;
     v/refrac (U, R) int32; thresh/leak/refrac_period (U,) int32;
-    extra (U, R) int32 or None."""
-    if extra is None:
-        return jax.vmap(lif_step)(weights, spikes, v, refrac, thresh, leak,
-                                  refrac_period)
+    extra (U, R) int32 or None; fault inputs (repro.faults, optional):
+    f_and/f_xor int8 (U, R, C), dead bool (U, R), dth int32 (U, R)."""
+    # None arguments are empty pytrees: vmap maps the present arrays and
+    # passes None through, so every optional combination shares this path
     return jax.vmap(lif_step)(weights, spikes, v, refrac, thresh, leak,
-                              refrac_period, extra)
+                              refrac_period, extra, f_and, f_xor, dead, dth)

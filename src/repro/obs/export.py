@@ -99,6 +99,14 @@ def to_chrome_trace(events, tick_period: int = 0, title: str = "repro-vp"):
                 else str(value)
             te.append({"name": f"watermark:{wm}", "ph": "i", "pid": seg,
                        "tid": 0, "ts": t, "s": "p", "args": {"flag": value}})
+        elif kind == tr.EV_FAULT:
+            te.append({"name": "fault_injected", "ph": "i", "pid": seg,
+                       "tid": 0, "ts": t, "s": "p",
+                       "args": {"dropped": value, "duplicated": unit}})
+        elif kind == tr.EV_SPIKE_LOSS:
+            te.append({"name": "spikes_dropped", "ph": "i", "pid": seg,
+                       "tid": 0, "ts": t, "s": "p",
+                       "args": {"lost": value}})
     return {
         "traceEvents": te,
         "displayTimeUnit": "ms",

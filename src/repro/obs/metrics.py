@@ -107,6 +107,33 @@ _register("snn.mmio_late", "counter", "ops", "segment",
           "hybrid MMIO ops that violated their tick-grid deadline "
           "(sticky; nonzero raises in the controller)")(
     lambda s: _A(s["stats"]["snn_mmio_late"]))
+_register("channel.inbox_lost", "counter", "messages", "segment",
+          "messages discarded by truncating inbox merges (nonzero only "
+          "under faults.FaultConfig(on_overflow='drop'); otherwise the "
+          "inbox watermark aborts first)", source="pending")(
+    lambda p: _A(p["lost_total"]))
+
+
+# fault-injection counters (repro.faults): the stats keys exist only when
+# the platform was built with the matching fault family enabled — the
+# extractors report zeros otherwise, so collect() stays total
+def _stat_or_zeros(s, key):
+    st = s["stats"]
+    return _A(st[key]) if key in st else np.zeros_like(_A(st["instrs"]))
+
+
+_register("faults.spikes_dropped", "counter", "spikes", "segment",
+          "AER spikes lost in flight to seeded transport faults "
+          "(faults.FaultConfig.p_spike_drop)")(
+    lambda s: _stat_or_zeros(s, "spikes_dropped"))
+_register("faults.spikes_duped", "counter", "spikes", "segment",
+          "AER spikes delivered twice by seeded transport faults "
+          "(faults.FaultConfig.p_spike_dup)")(
+    lambda s: _stat_or_zeros(s, "spikes_duped"))
+_register("faults.outbox_lost", "counter", "spikes", "segment",
+          "messages truncated at the outbox under the graceful-degradation "
+          "overflow policy (faults.FaultConfig(on_overflow='drop'))")(
+    lambda s: _stat_or_zeros(s, "outbox_lost"))
 
 
 def collect(states, pending=None) -> dict:

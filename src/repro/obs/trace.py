@@ -29,6 +29,8 @@ Event kinds (see docs/observability.md for the full schema):
   EV_CIM_START    CIM slot                         busy_until (end time)
   EV_CIM_DONE     CIM slot                         output rows DMA'd
   EV_WMARK        -1                               watermark id (0..3)
+  EV_FAULT        spikes duplicated this round     spikes dropped in flight
+  EV_SPIKE_LOSS   -1                               spikes lost to overflow
   ==============  ===============================  =====================
 
 ``t`` is always the *simulated* time (cycles) the event belongs to —
@@ -49,9 +51,11 @@ EV_SPIKE_TX = 3  # AER spikes emitted toward one fan-out destination
 EV_CIM_START = 4  # a dense CIM OP launched (MMIO CIM_REG_START applied)
 EV_CIM_DONE = 5  # a dense CIM OP completed + DMA'd its output rows
 EV_WMARK = 6     # a sticky watermark tripped (first time only, per segment)
+EV_FAULT = 7     # seeded transport faults fired (drop/duplication, faults/)
+EV_SPIKE_LOSS = 8  # graceful degradation: spikes lost to outbox overflow
 
 KIND_NAMES = ("quantum", "route", "tick", "spike_tx", "cim_start",
-              "cim_done", "watermark")
+              "cim_done", "watermark", "fault_injected", "spikes_dropped")
 WMARK_NAMES = ("inbox", "outbox", "store_log", "snn_mmio_late")
 
 FIELDS = ("kind", "seg", "unit", "t", "value")

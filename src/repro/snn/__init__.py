@@ -21,8 +21,11 @@ Module map:
 
 Related VP pieces: core/channel.py MSG_SPIKE (tick-bucketed AER events),
 vp/isa.py CIM_REG_MODE, vp/cim.py snn_tick (quantum-boundary LIF
-integration), benchmarks/bench_snn.py (spikes/sec per segmentation).
+integration), benchmarks/bench_snn.py (spikes/sec per segmentation),
+repro.faults (seeded fault injection — ``build_snn(faults=...)`` and the
+``degradation_sweep`` accuracy-vs-fault-rate driver re-exported here).
 """
+from repro.faults import FaultConfig, degradation_sweep
 from repro.snn.neuron import LIFParams, lif_step, lif_step_multi, pool_state
 from repro.snn.topology import (
     RecurrentEdge,
@@ -55,4 +58,5 @@ from repro.snn.workloads import (
     rate_encode,
     snn_inference_job,
     snn_recurrent_job,
+    snn_skip_job,
 )

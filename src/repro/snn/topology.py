@@ -88,11 +88,13 @@ class SNNLayer:
 
 @dataclasses.dataclass(frozen=True)
 class RecurrentEdge:
-    """Backward projection: layer ``src``'s spikes feed layer ``dst <= src``
-    (one tick later, like every hop).  ``weights`` is int8
-    (layers[dst].n_out, layers[src].n_out); ``dst == src`` is equivalent to
-    ``SNNLayer.lateral``.  Forward skip connections are not edges — the
-    chain already is the forward path."""
+    """Extra projection: layer ``src``'s spikes feed layer ``dst`` (one
+    tick later, like every hop).  ``weights`` is int8
+    (layers[dst].n_out, layers[src].n_out).  ``dst <= src`` is a recurrent
+    or lateral edge (``dst == src`` is equivalent to ``SNNLayer.lateral``);
+    ``dst > src + 1`` is a forward *skip* connection (l -> l+k, e.g.
+    residual-style shortcuts) — still acyclic, so no tick horizon needed
+    unless some other edge closes a cycle."""
     src: int
     dst: int
     weights: np.ndarray
@@ -132,10 +134,9 @@ def connectivity(layers, edges=()):
             pairs.append((l, l, lat))
     for e in edges:
         assert isinstance(e, RecurrentEdge), "edges must be RecurrentEdge"
-        assert 0 <= e.dst <= e.src < n_layers, (
-            f"recurrent edge {e.src}->{e.dst}: needs 0 <= dst <= src < "
-            f"{n_layers} (the forward path is the layer chain; recurrent "
-            "edges point backward or sideways)")
+        assert 0 <= e.dst < n_layers and 0 <= e.src < n_layers, (
+            f"edge {e.src}->{e.dst}: both ends must name layers in "
+            f"[0, {n_layers})")
         w = np.asarray(e.weights, np.int8)
         want = (layers[e.dst].n_out, layers[e.src].n_out)
         assert w.shape == want, (
@@ -600,18 +601,31 @@ def _wire_spike_units(layers, groups, placement, in_edges, out_edges,
     return crossbars, cim_init, placement, by_layer
 
 
+def _fault_uids(groups, placement):
+    """Placement-invariant unit identities for the fault PRNG
+    (repro.faults): logical (layer, stripe, tile) coordinates rather than
+    global unit ids, so re-segmenting or re-placing the same network draws
+    the same structural fault sites and drops the same spikes."""
+    uids = {}
+    for gi, g in enumerate(groups):
+        for t in range(g.width):
+            uids[placement[gi] + t] = (g.layer << 16) | (g.stripe << 8) | t
+    return uids
+
+
 def build_snn(layers, descs, raster, *, edges=(), n_ticks: int | None = None,
               placement=None, tick_period: int = 10_000,
               channel_latency: int = 10_000, local_latency: int = 64,
               use_kernel: bool = False, in_cap: int | None = None,
-              out_cap: int | None = None):
+              out_cap: int | None = None, faults=None):
     """Assemble a runnable SNN simulation.
 
     layers: [SNNLayer, ...] feed-forward chain (possibly with ``lateral``
         synapses); layers wider than one crossbar — in either dimension,
         counting every in-edge's columns — are tiled into stripe groups
         (see ``layer_groups``)
-    edges: (RecurrentEdge, ...) backward projections (dst <= src)
+    edges: (RecurrentEdge, ...) extra projections — recurrent/lateral
+        (dst <= src) or forward skip connections (dst > src + 1)
     n_ticks: tick horizon — every unit runs exactly ``n_ticks`` LIF ticks
         (``tick_limit``), matching the cycle-aware oracle's bounded window.
         Mandatory for cyclic connectivity (lateral or recurrent edges:
@@ -630,6 +644,10 @@ def build_snn(layers, descs, raster, *, edges=(), n_ticks: int | None = None,
         segment in half its capacity; event-driven runs with short rasters
         can shrink both dramatically (the caps are the per-round cost on a
         CPU-free platform, and undersizing raises loudly)
+    faults: ``repro.faults.FaultConfig`` or None — seeded fault injection
+        (see docs/faults.md).  Unit identities given to the fault PRNG are
+        logical (layer, stripe, tile) coordinates, so the same network
+        faults identically under every segmentation and placement.
     Returns (cfg, states, pending, meta) ready for the Controller; meta
     locates the output units for spike-count readback.
     """
@@ -663,6 +681,7 @@ def build_snn(layers, descs, raster, *, edges=(), n_ticks: int | None = None,
         descs, crossbars=crossbars, cim_init=cim_init,
         channel_latency=channel_latency, local_latency=local_latency,
         use_kernel=use_kernel, in_cap=in_cap, out_cap=out_cap,
+        faults=faults, fault_uids=_fault_uids(groups, placement),
     )
     in_tiles = [
         [(cim_seg[placement[gi] + t], cim_slot[placement[gi] + t])
@@ -729,15 +748,18 @@ def _inject_raster(pending, n_segments, in_tiles, raster, tick_period):
     out["count"] = jnp.asarray(count)
     out["max_count"] = jnp.asarray(count)
     # injected events are pre-scheduled, not routed: the routed-traffic
-    # counter (obs/metrics.py) starts at zero
+    # counter (obs/metrics.py) starts at zero, as does the overflow-loss
+    # counter (the assert above guarantees injection itself never drops)
     out["routed_total"] = jnp.zeros((n_segments,), jnp.int32)
+    out["lost_total"] = jnp.zeros((n_segments,), jnp.int32)
     return jax.tree.map(lambda a, b: b, pending, out)
 
 
 def build_hybrid(job, strategy: str = "split", *, tick_period: int | None = None,
                  channel_latency: int = 10_000, local_latency: int = 64,
                  use_kernel: bool = False, in_cap: int | None = None,
-                 out_cap: int | None = None, store_log: int | None = None):
+                 out_cap: int | None = None, store_log: int | None = None,
+                 faults=None):
     """Assemble the paper's headline co-simulation scenario: live RISC-V
     CPUs, dense-mode CIM units, and spike-mode CIM units in ONE platform.
 
@@ -862,7 +884,8 @@ def build_hybrid(job, strategy: str = "split", *, tick_period: int | None = None
         scratch_init=scratch, cim_init=cim_init,
         channel_latency=channel_latency, local_latency=local_latency,
         use_kernel=use_kernel, in_cap=in_cap, out_cap=out_cap,
-        store_log=store_log)
+        store_log=store_log, faults=faults,
+        fault_uids=_fault_uids(groups, placement))
     meta = {
         **_snn_meta(layers, groups, placement, by_layer, out_edges, n_ticks,
                     cim_seg, cim_slot),

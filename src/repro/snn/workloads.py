@@ -204,6 +204,27 @@ def hybrid_job(layer_sizes=(32, 24, 10), t_steps: int = 8, rate: float = 0.5,
     return HybridJob(dense, o, snn, seed)
 
 
+def snn_skip_job(layer_sizes=(32, 24, 16, 10), t_steps: int = 8,
+                 rate: float = 0.5, seed: int = 0, w_lo: int = -4,
+                 w_hi: int = 8) -> SNNJob:
+    """Feed-forward chain plus a forward *skip* connection from the first
+    hidden layer straight to the output layer (l -> l+k, a residual-style
+    shortcut).  Still acyclic, so no tick horizon is needed — the network
+    drains by itself, like the plain chain; the skip's spikes simply arrive
+    one tick after emission like every hop (so the output integrates the
+    shortcut path earlier than the deep path)."""
+    assert len(layer_sizes) >= 4, "a skip needs dst > src + 1"
+    rng = np.random.default_rng(seed + 3)
+    layers = random_snn(layer_sizes, seed=seed)
+    src, dst = 0, len(layers) - 1
+    skip = RecurrentEdge(src=src, dst=dst, weights=rng.integers(
+        w_lo, w_hi, (layers[dst].n_out, layers[src].n_out)).astype(np.int8))
+    x = rng.random(layer_sizes[0]) * rate * 2
+    raster = rate_encode(x, t_steps, seed=seed + 2)
+    counts, totals = oracle_run(layers, raster, edges=(skip,))
+    return SNNJob(layers, raster, counts, int(totals.sum()), edges=(skip,))
+
+
 def snn_recurrent_job(layer_sizes=(48, 40, 12), t_steps: int = 10,
                       rate: float = 0.5, seed: int = 0,
                       settle: int = 6) -> SNNJob:

@@ -154,12 +154,16 @@ def apply_start(cims, u, t_now):
     return cims
 
 
-def crossbar_vmm_ref(weights, x, in_res, out_res):
+def crossbar_vmm_ref(weights, x, in_res, out_res, f_and=None, f_xor=None):
     """Quantized crossbar VMM (jnp oracle; the Pallas kernel mirrors this).
 
     weights int8 (R, C); x int32 (C,) — DAC clamps x to in_res signed bits,
     analog MAC is exact, ADC saturates the result to out_res+acc headroom.
+    ``f_and``/``f_xor`` (int8 (R, C), optional, repro.faults): read-time
+    crossbar fault masks — the MAC contracts ``(w & f_and) ^ f_xor``.
     """
+    if f_and is not None:
+        weights = (weights & f_and) ^ f_xor
     lo_in = -(1 << (in_res - 1))
     hi_in = (1 << (in_res - 1)) - 1
     xq = jnp.clip(x, lo_in, hi_in)
@@ -179,15 +183,21 @@ def finish_ops(cims, t_end, use_kernel: bool = False):
         & (cims["state"] == isa.CIM_ST_OP)
         & (cims["busy_until"] <= t_end)
     )
+    # crossbar fault masks (repro.faults): present in the state exactly
+    # when the build carried crossbar faults — a static dict-key check, so
+    # the fault-free step compiles identically to a pre-fault build
+    fa, fx = cims.get("f_and"), cims.get("f_xor")
     if use_kernel:
         from repro.kernels.crossbar_vmm.ops import crossbar_vmm_batch
 
         # kernel block shapes specialize on the resolutions (static); the
         # platform runs the Table II configuration (8-bit I/O)
-        outs = crossbar_vmm_batch(cims["weights"], cims["in_buf"], 8, 8)
+        outs = crossbar_vmm_batch(cims["weights"], cims["in_buf"], 8, 8,
+                                  fa, fx)
     else:
         outs = jax.vmap(crossbar_vmm_ref, in_axes=(0, 0, None, None))(
-            cims["weights"], cims["in_buf"], 8, 8
+            cims["weights"] if fa is None else (cims["weights"] & fa) ^ fx,
+            cims["in_buf"], 8, 8
         )
     cims = dict(cims)
     cims["out_buf"] = jnp.where(done[:, None], outs, cims["out_buf"])
@@ -246,6 +256,11 @@ def snn_tick(cims, t_gate, use_kernel: bool = False, grouped: bool = False):
         # so the horizon is what makes termination decidable)
         & ((cims["tick_limit"] == 0) | (cims["ticks"] < cims["tick_limit"]))
     )
+    # fault-injection inputs (repro.faults): static dict-key checks — the
+    # arrays exist exactly when the build carried that fault family, so
+    # the fault-free tick compiles identically to a pre-fault build
+    fa, fx = cims.get("f_and"), cims.get("f_xor")
+    dead, dth = cims.get("f_dead"), cims.get("f_dth")
     is_contrib = None
     if grouped:
         from repro.kernels.lif_step import ref as lif_ref
@@ -255,7 +270,8 @@ def snn_tick(cims, t_gate, use_kernel: bool = False, grouped: bool = False):
         # contributor tiles flush their charge only on a firing tick (the
         # whole group fires in lockstep: same segment, same wiring)
         fwd = is_contrib & fire
-        charge = jax.vmap(lif_ref.syn_charge)(cims["weights"], cims["in_buf"])
+        charge = jax.vmap(lif_ref.syn_charge)(cims["weights"],
+                                              cims["in_buf"], fa, fx)
         extra = jnp.zeros_like(charge).at[
             jnp.where(fwd, cims["owner_slot"], n_slots)
         ].add(jnp.where(fwd[:, None], charge, 0), mode="drop")
@@ -268,6 +284,7 @@ def snn_tick(cims, t_gate, use_kernel: bool = False, grouped: bool = False):
             v2, refrac2, fired_i = lif_step_units(
                 cims["weights"], cims["in_buf"], cims["v"], cims["refrac"],
                 cims["thresh"], cims["leak"], cims["refrac_period"], extra,
+                fa, fx, dead, dth,
             )
         else:
             # charge is already in hand for every slot: run only the
@@ -275,6 +292,7 @@ def snn_tick(cims, t_gate, use_kernel: bool = False, grouped: bool = False):
             v2, refrac2, fired_i = jax.vmap(lif_ref.lif_update)(
                 charge + extra, cims["v"], cims["refrac"],
                 cims["thresh"], cims["leak"], cims["refrac_period"],
+                dead, dth,
             )
     else:
         if use_kernel:
@@ -284,6 +302,7 @@ def snn_tick(cims, t_gate, use_kernel: bool = False, grouped: bool = False):
         v2, refrac2, fired_i = lif_step_units(
             cims["weights"], cims["in_buf"], cims["v"], cims["refrac"],
             cims["thresh"], cims["leak"], cims["refrac_period"],
+            None, fa, fx, dead, dth,
         )
     rows_idx = jnp.arange(XBAR)
     fired_rows = fire[:, None] & (fired_i != 0) & (rows_idx[None, :] < cims["rows"][:, None])

@@ -83,6 +83,12 @@ class VPConfig:
                               # (k+1)*period, making injected spikes land in
                               # the same bucket as pre-scheduled raster events
                               # under every placement, backend, and quantum.
+    # seeded fault-injection model (faults.FaultConfig) or None.  Static
+    # like obs: the frozen config keys the controller's function cache and
+    # every injection branch below is resolved at trace time — None
+    # compiles the whole fault subsystem out of the step (bit-identical to
+    # a build that predates it).
+    faults: object = None
     # static wiring: global cim id -> (segment, slot); manager cpu segment
     cim_seg: tuple = ()
     cim_slot: tuple = ()
@@ -96,7 +102,8 @@ class VPConfig:
 
 def segment_state(cfg: VPConfig):
     """One segment's zero state (stack n of these for the simulation)."""
-    return {
+    fc = cfg.faults
+    state = {
         "time": jnp.zeros((), jnp.int32),
         "seg_id": jnp.zeros((), jnp.int32),
         "cpu": riscv.cpu_state(),
@@ -126,6 +133,43 @@ def segment_state(cfg: VPConfig):
             "txn_hist": jnp.zeros((8,), jnp.int32),  # Fig. 1a trace histogram
         },
     }
+    if fc is not None:
+        # fault-state arrays exist exactly when the corresponding fault
+        # family is active — absent keys keep the fault-off tree (and the
+        # compiled step) byte-identical to a pre-fault build
+        n = cfg.n_cim_slots
+        xb = cim_mod.XBAR
+        cims = dict(state["cims"])
+        if fc.has_xbar_faults:
+            # read-time crossbar masks: w_eff = (w & f_and) ^ f_xor — the
+            # builder (core/segmentation.py) fills the fault sites per unit
+            cims["f_and"] = jnp.full((n, xb, xb), -1, jnp.int8)
+            cims["f_xor"] = jnp.zeros((n, xb, xb), jnp.int8)
+        if fc.has_neuron_faults:
+            cims["f_dead"] = jnp.zeros((n, xb), jnp.bool_)
+            cims["f_dth"] = jnp.zeros((n, xb), jnp.int32)
+        if fc.has_transport_faults:
+            # placement-invariant unit identities: the transport hash keys
+            # on these, never on (segment, slot), so re-segmenting the same
+            # network drops the same spikes
+            cims["f_uid"] = jnp.arange(n, dtype=jnp.int32)
+            # the fault PRNG state rides the megaloop carry: the seed lives
+            # on device so injection decisions never touch the host
+            state["faults"] = {
+                "seed": jnp.full((), fc.seed & 0xFFFFFFFF, jnp.uint32)}
+            stats = dict(state["stats"])
+            stats["spikes_dropped"] = jnp.zeros((), jnp.int32)
+            stats["spikes_duped"] = jnp.zeros((), jnp.int32)
+            state["stats"] = stats
+        if fc.drop_overflow:
+            # graceful degradation: outbox messages lost to truncation are
+            # counted here instead of aborting the run (inbox losses live
+            # in pending["lost_total"])
+            stats = dict(state["stats"])
+            stats["outbox_lost"] = jnp.zeros((), jnp.int32)
+            state["stats"] = stats
+        state["cims"] = cims
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -248,16 +292,41 @@ def _apply_inbox(cfg: VPConfig, st, pending):
         # a future spike racing a runtime eligibility change must wait
         # for the reconfiguration to apply, not vanish early
         mdrop = in_range & ~eligible & (pending["t_avail"] <= t)
+        # --- transport faults (faults.FaultConfig): seeded drop/duplication
+        # decided at the consumption point.  The fate of a spike hashes pure
+        # simulation coordinates — (seed, unit identity, axon, tick time) —
+        # all of which are placement/backend/quantum-invariant, so a fixed
+        # seed loses the identical spikes everywhere.  The event is still
+        # consumed (spk_applied below keys on msu): a dropped spike vanishes
+        # in flight, it does not linger in the channel. ---
+        fc = cfg.faults
+        integrated = msu
+        data_eff = data
+        if fc is not None and fc.has_transport_faults:
+            from repro import faults as flt
+
+            seed = st["faults"]["seed"]
+            uid = cims["f_uid"][su]
+            tick_t = cims["next_tick"][su]
+            h = flt.hash_u32(seed, uid, axon, tick_t)
+            th_drop = jnp.uint32(flt.threshold_u32(fc.p_spike_drop))
+            dropped = msu & (h < th_drop)
+            h2 = flt.hash_u32(seed, uid, axon, tick_t, 0xD0B1)
+            th_dup = jnp.uint32(flt.threshold_u32(fc.p_spike_dup))
+            duped = msu & ~dropped & (h2 < th_dup)
+            integrated = msu & ~dropped
+            data_eff = jnp.where(duped, data * 2, data)
         dead = cfg.n_cim_slots * cim_mod.XBAR
-        tgt = jnp.where(msu & (axon < cim_mod.XBAR), su * cim_mod.XBAR + axon, dead)
+        tgt = jnp.where(integrated & (axon < cim_mod.XBAR),
+                        su * cim_mod.XBAR + axon, dead)
         cims = dict(cims)
         cims["in_buf"] = cims["in_buf"].reshape(-1).at[tgt].add(
-            jnp.where(msu, data, 0), mode="drop"
+            jnp.where(integrated, data_eff, 0), mode="drop"
         ).reshape(cfg.n_cim_slots, cim_mod.XBAR)
         # consumed-spike accounting (obs/metrics.py): events integrated, per
         # unit and per segment — dropped/mis-addressed events don't count
         cims["spikes_in"] = cims["spikes_in"].at[
-            jnp.where(msu, su, cfg.n_cim_slots)
+            jnp.where(integrated, su, cfg.n_cim_slots)
         ].add(1, mode="drop")
         spk_applied = (spk & ~in_range) | msu | mdrop
 
@@ -273,8 +342,15 @@ def _apply_inbox(cfg: VPConfig, st, pending):
     )
     if cfg.has_snn:
         st["stats"]["spikes_consumed"] = (
-            st["stats"]["spikes_consumed"] + msu.sum().astype(jnp.int32)
+            st["stats"]["spikes_consumed"] + integrated.sum().astype(jnp.int32)
         )
+        if cfg.faults is not None and cfg.faults.has_transport_faults:
+            st["stats"]["spikes_dropped"] = (
+                st["stats"]["spikes_dropped"] + dropped.sum().astype(jnp.int32)
+            )
+            st["stats"]["spikes_duped"] = (
+                st["stats"]["spikes_duped"] + duped.sum().astype(jnp.int32)
+            )
 
     if cfg.has_cpu:
         # --- blocking DRAM read requests: service now, respond via outbox ---
@@ -466,9 +542,21 @@ def make_segment_step(cfg: VPConfig, quantum: int, obs=None):
             occ0 = pending["valid"].sum().astype(jnp.int32)
             instr0 = st["stats"]["instrs"]
             cim_state0 = st["cims"]["state"]
+            transport_on = (cfg.faults is not None
+                            and cfg.faults.has_transport_faults)
+            if transport_on:
+                drop0 = st["stats"]["spikes_dropped"]
+                dup0 = st["stats"]["spikes_duped"]
         st, pending, responses, _, consumed = _apply_inbox(cfg, st, pending)
         if obs is not None:
             lane(consumed > 0, tr.EV_ROUTE, occ0, t_inbox, consumed)
+            if transport_on:
+                # one fault_injected event per round that injected: unit
+                # carries the duplication count, value the drop count
+                d_drop = st["stats"]["spikes_dropped"] - drop0
+                d_dup = st["stats"]["spikes_duped"] - dup0
+                lane((d_drop + d_dup) > 0, tr.EV_FAULT, d_dup, t_inbox,
+                     d_drop)
             if cfg.has_cpu:
                 # a dense OP can only launch via an MMIO START in this inbox
                 started = ((st["cims"]["state"] == isa.CIM_ST_OP)
@@ -672,15 +760,28 @@ def make_segment_step(cfg: VPConfig, quantum: int, obs=None):
         st["stats"] = dict(st["stats"])
         st["stats"]["msgs"] = st["stats"]["msgs"] + outbox["count"]
         # sticky watermark: past-capacity appends are silently lost (bulk
-        # appends truncate, single appends clip onto the last slot), so a
-        # peak beyond out_cap means emitted messages (e.g. a wide SNN tick's
-        # AER burst) were dropped — checked loudly by the controller
-        # alongside the inbox watermark
+        # and single appends both drop past-cap writes), so a peak beyond
+        # out_cap means emitted messages (e.g. a wide SNN tick's AER burst)
+        # were dropped — checked loudly by the controller alongside the
+        # inbox watermark (or counted as loss under the drop policy below)
         st["stats"]["outbox_peak"] = jnp.maximum(st["stats"]["outbox_peak"], outbox["count"])
+        if cfg.faults is not None and cfg.faults.drop_overflow:
+            # graceful degradation: the appends above already truncated
+            # past-capacity messages, so the demand beyond out_cap this
+            # round IS the loss — count it instead of letting the watermark
+            # abort (controller skips the outbox raise under this policy)
+            lost_now = jnp.maximum(outbox["count"] - cfg.out_cap, 0)
+            st["stats"]["outbox_lost"] = st["stats"]["outbox_lost"] + lost_now
         if obs is not None:
             dt = st["time"] - t_inbox
             lane(dt > 0, tr.EV_QUANTUM, st["stats"]["instrs"] - instr0,
                  t_inbox, dt)
+            if cfg.faults is not None and cfg.faults.drop_overflow:
+                # spikes_dropped lane: messages lost to outbox truncation
+                # this round (inbox-side losses accumulate in
+                # pending["lost_total"], outside the per-segment ring)
+                lane(lost_now > 0, tr.EV_SPIKE_LOSS, -1, st["time"],
+                     lost_now)
             # watermark trips, deduped through the ring's wmark_seen bitmask
             # so each flag traces once per segment (the flag itself stays
             # sticky in stats/pending; detection here is advisory telemetry,
@@ -764,7 +865,17 @@ def termination_flags(states, pending, in_cap: int, out_cap: int,
         & ((cims["tick_limit"] == 0) | (cims["ticks"] < cims["tick_limit"]))
     )
     pending_in = (cims["in_buf"] != 0).any(-1)
-    due = ((cims["v"] >= cims["thresh"][..., None]) & (cims["refrac"] == 0)).any(-1)
+    # neuron faults shift the firing predicate, and the termination check
+    # must shift with it: a dead neuron is never due, a drifted threshold
+    # is due at its *effective* threshold — otherwise a faulted network
+    # would wedge (or quit early) at the quiesce check
+    thr = cims["thresh"][..., None]
+    if "f_dth" in cims:
+        thr = jnp.maximum(thr + cims["f_dth"], 1)
+    due = (cims["v"] >= thr) & (cims["refrac"] == 0)
+    if "f_dead" in cims:
+        due = due & ~cims["f_dead"]
+    due = due.any(-1)
     busy_snn = jnp.any(ticking & (pending_in | due))
     busy_req = jnp.any(cims["present"] & (cims["count_req"] >= 0))
     msgs = jnp.any(pending["valid"])

@@ -47,6 +47,7 @@ except ImportError:
 DENSE_LAYER = wl.Layer("conf", "t", 8, 8, 4)
 FF_JOB = snn.snn_inference_job((32, 24, 10), t_steps=8, rate=0.5, seed=2)
 REC_JOB = snn.snn_recurrent_job((32, 24, 8), t_steps=8, rate=0.5, seed=2)
+SKIP_JOB = snn.snn_skip_job((32, 24, 16, 10), t_steps=8, rate=0.5, seed=2)
 HYBRID_JOB = snn.hybrid_job((16, 12, 8), t_steps=6, rate=0.5, seed=2)
 
 
@@ -118,6 +119,8 @@ def build_sim(kind, strategy):
         return build_snn_job(FF_JOB, strategy)
     if kind == "snn_recurrent":
         return build_snn_job(REC_JOB, strategy)
+    if kind == "snn_skip":
+        return build_snn_job(SKIP_JOB, strategy)
     if kind == "hybrid":
         return build_hybrid_job(strategy)
     raise ValueError(kind)
@@ -165,6 +168,9 @@ SWEEP = [
     ("snn_ff", "load_oriented", 32),
     ("snn_recurrent", "uniform", 16), ("snn_recurrent", "uniform", 64),
     ("snn_recurrent", "load_oriented", 32),
+    # forward skip connection (layer 0 -> output, dst > src + 1): acyclic,
+    # drains without a horizon, oracle-exact on every backend
+    ("snn_skip", "uniform", 32), ("snn_skip", "load_oriented", 32),
     # hybrid: dense VMM + SNN + two live CPUs in one platform, raster
     # CPU-injected — ≥2 segmentations x ≥2 quanta (the PR-5 gate)
     ("hybrid", "split", 400), ("hybrid", "split", 1000),
@@ -499,6 +505,11 @@ def test_undersized_out_cap_raises_actionable_error(fused):
     with pytest.raises(RuntimeError, match=r"outbox overflow.*out_cap") as ei:
         ctl.run(max_rounds=300, check_every=2, fused=fused)
     assert "raise out_cap" in str(ei.value)
+    # remediation hint: the watermark records demand, so the message names
+    # the smallest out_cap that would have absorbed the burst
+    assert "smallest sufficient out_cap=" in str(ei.value)
+    peak = int(np.asarray(ctl.result_states()["stats"]["outbox_peak"]).max())
+    assert f"smallest sufficient out_cap={peak}" in str(ei.value)
 
 
 @pytest.mark.parametrize("fused", [False, True])
@@ -510,6 +521,8 @@ def test_undersized_in_cap_raises_actionable_error(fused):
     with pytest.raises(RuntimeError, match=r"inbox overflow.*in_cap") as ei:
         ctl.run(max_rounds=300, check_every=2, fused=fused)
     assert "raise in_cap" in str(ei.value)
+    peak = int(np.asarray(ctl._pending_stacked()["max_count"]).max())
+    assert f"smallest sufficient in_cap={peak}" in str(ei.value)
 
 
 @pytest.mark.parametrize("fused", [False, True])
@@ -525,6 +538,7 @@ def test_undersized_store_log_raises_actionable_error(fused):
     with pytest.raises(RuntimeError, match=r"store-log overflow.*store_log") as ei:
         ctl.run(max_rounds=100, check_every=2, fused=fused)
     assert "raise store_log" in str(ei.value)
+    assert "smallest sufficient store_log=" in str(ei.value)
 
 
 def test_error_messages_identical_fused_and_per_round():

@@ -147,6 +147,37 @@ def test_megaloop_inbox_overflow_same_error(monkeypatch):
     assert "pending inbox overflow" in msgs["mega"]
 
 
+@pytest.mark.parametrize("backend", ["sequential", "threads", "vmap"])
+def test_controller_usable_after_watermark_error(backend):
+    """A watermark RuntimeError must not poison the process: after one
+    controller aborts on overflow, a fresh controller on a fresh workload
+    runs to completion (the compiled-function cache, donated buffers, and
+    backend pools all survive the error path), and the failed controller's
+    results stay readable."""
+    from repro import snn
+
+    job = snn.snn_inference_job((8, 200, 8), t_steps=3, rate=0.9, seed=4)
+    descs = snn.segmentation_for(snn.n_units_for(job.layers), "uniform",
+                                 n_segments=2)
+    cfg, states, pending, _ = snn.build_snn(job.layers, descs, job.raster,
+                                            out_cap=24)
+    bad = Controller(cfg, states, pending, backend=backend, quantum=32)
+    with pytest.raises(RuntimeError, match="outbox overflow"):
+        bad.run(max_rounds=300, check_every=2)
+    # the erroring controller's state stays readable after the abort
+    assert int(np.asarray(bad.result_states()["stats"]["outbox_peak"]).max()) > 24
+    assert bad.stats() is not None
+
+    job2 = snn.snn_inference_job((16, 12, 8), t_steps=6, rate=0.6, seed=5)
+    descs2 = snn.segmentation_for(2, "uniform", n_segments=2)
+    cfg2, states2, pending2, meta2 = snn.build_snn(job2.layers, descs2,
+                                                   job2.raster)
+    good = Controller(cfg2, states2, pending2, backend=backend, quantum=32)
+    rounds, _ = good.run(max_rounds=300, check_every=2)
+    counts = np.asarray(snn.output_spike_counts(good.result_states(), meta2))
+    np.testing.assert_array_equal(counts, job2.expected_counts)
+
+
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=8, deadline=None)

@@ -110,6 +110,8 @@ SYNTHETIC = _events([
     (tr.EV_CIM_START, 0, 1, 50, 90),
     (tr.EV_CIM_DONE, 0, 1, 90, 8),
     (tr.EV_WMARK, 0, -1, 95, 1),
+    (tr.EV_FAULT, 1, 2, 96, 5),
+    (tr.EV_SPIKE_LOSS, 0, -1, 97, 7),
 ])
 
 

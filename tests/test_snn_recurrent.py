@@ -49,13 +49,20 @@ def test_connectivity_axon_spaces():
 
 def test_connectivity_rejects_bad_edges():
     layers = snn.random_snn((16, 12, 8), seed=1)
-    with pytest.raises(AssertionError, match="dst <= src"):
-        snn.connectivity(layers, (snn.RecurrentEdge(0, 1, np.zeros((8, 12), np.int8)),))
+    with pytest.raises(AssertionError, match="must name layers"):
+        snn.connectivity(layers, (snn.RecurrentEdge(0, 2, np.zeros((8, 12), np.int8)),))
     with pytest.raises(AssertionError, match="must be"):
         snn.connectivity(layers, (snn.RecurrentEdge(1, 0, np.zeros((3, 3), np.int8)),))
     with pytest.raises(AssertionError, match="lateral"):
         bad = snn.SNNLayer(np.zeros((8, 4), np.int8), lateral=np.zeros((4, 8), np.int8))
         snn.connectivity([bad])
+    # forward edges (dst > src) are legal since the skip-connection support:
+    # this parallel 0 -> 1 projection wires as an extra in-edge, acyclically
+    in_edges, _, _ = snn.connectivity(
+        layers, (snn.RecurrentEdge(0, 1, np.zeros((8, 12), np.int8)),))
+    assert len(in_edges[1]) == 2
+    assert not snn.is_cyclic(
+        layers, (snn.RecurrentEdge(0, 1, np.zeros((8, 12), np.int8)),))
 
 
 def test_cyclic_without_horizon_rejected():
