@@ -367,6 +367,125 @@ def run_hybrid(strategies=("split", "packed", "auto"), sizes=HYBRID_SIZES,
     return rows
 
 
+SERVE_N_REQ = 16          # fleet size: enough for two full 8-buckets
+SERVE_BUCKETS = (2, 8)    # acceptance wants >=2 bucket sizes; 8 carries
+                          # the >=2x-over-solo bar
+SERVE_T_STEPS = MEGA_T_STEPS  # same dispatch-bound regime as run_megaloop
+SERVE_CAPS = dict(in_cap=1024, out_cap=128)  # fleet rasters are seed-varied
+                                             # (up to ~413 events): headroom
+                                             # over the worst draw
+
+
+def run_serve(sizes=MEGA_SIZES, n_requests=SERVE_N_REQ,
+              buckets=SERVE_BUCKETS, t_steps=SERVE_T_STEPS, seed=6):
+    """Fleet serving: requests/sec and p99 latency per bucket size.
+
+    A fleet of independent inference requests (same topology, different
+    rasters — one normalized bucket key) is served through ``SnnServer``
+    at each bucket size, against two solo-loop baselines, each running the
+    requests back to back through their own ``Controller.run``:
+
+    * **sq** — the sequential backend, the paper-convention baseline every
+      other scenario in this file reports against.  The >=2x acceptance
+      bar at bucket 8+ is enforced against this one (in ``ok``).
+    * **pll** — the fused-vmap megaloop, the strongest single-job path.
+      Reported honestly: on a single-core host the job axis does NOT beat
+      it (``vs_pll`` ~0.9x) — vmapped sort/scatter rounds execute
+      per-job-row on CPU, so batched compute is serial-linear and the
+      dispatch amortization roughly cancels against the freeze/stack
+      overhead.  The batched win over pll needs parallel hardware (the
+      ``shard_map`` fan-out) or host-bound loops; what batching buys
+      unconditionally is the sq/per-round orchestration overhead.
+
+    Every served request must be bit-identical to its solo run at the
+    same ``check_every`` cadence and match its oracle counts — both in
+    ``ok``.  p99 is serving latency — wall time from ``submit`` to the
+    request's bucket completing — so the batched p99 *rises* with bucket
+    size while throughput climbs: the classic batching trade, reported
+    honestly.  Warm-up runs come first so compile time lands outside the
+    measured window.
+    """
+    from repro.serve.snn_serve import SnnServer
+    from repro.snn import workloads as wl
+
+    check_every = 4
+    reqs = wl.serve_fleet(n_requests, sizes, seed=seed,
+                          t_steps_choices=(t_steps,), rate=0.2,
+                          **SERVE_CAPS)
+
+    def solo_pass(backend, fused):
+        lats, sts = [], []
+        t0 = time.perf_counter()
+        for r in reqs:
+            t1 = time.perf_counter()
+            c = Controller(r.cfg, r.states, r.pending, backend=backend,
+                           quantum=QUANTUM)
+            c.run(max_rounds=400, check_every=check_every, fused=fused)
+            lats.append(time.perf_counter() - t1)
+            sts.append(c.result_states())
+        return time.perf_counter() - t0, lats, sts
+
+    warm = Controller(reqs[0].cfg, reqs[0].states, reqs[0].pending,
+                      backend="vmap", quantum=QUANTUM)
+    warm.run(max_rounds=400, check_every=check_every, fused=True)
+    warm.block_until_ready()
+    pll_total = float("inf")
+    for _ in range(3):
+        total, lats, sts = solo_pass("vmap", True)
+        if total < pll_total:
+            pll_total, pll_lat, solo_states = total, lats, sts
+    # sq is ~minutes-per-repeat territory and 10x+ off the pace: one pass
+    warm = Controller(reqs[0].cfg, reqs[0].states, reqs[0].pending,
+                      backend="sequential", quantum=QUANTUM)
+    warm.run(max_rounds=400, check_every=check_every)
+    sq_total, sq_lat, _ = solo_pass("sequential", None)
+    sq_rps = n_requests / sq_total
+    pll_rps = n_requests / pll_total
+
+    rows = []
+    for bucket in buckets:
+        def serve_once():
+            srv = SnnServer(quantum=QUANTUM, check_every=check_every,
+                            max_rounds=400, bucket_size=bucket)
+            for r in reqs:
+                srv.submit(r)
+            t0 = time.perf_counter()
+            res = srv.flush()
+            return time.perf_counter() - t0, res, srv
+        serve_once()  # warm: compile the width-`bucket` batched megaloop
+        t_best = float("inf")
+        for _ in range(3):
+            t, res, srv = serve_once()
+            if t < t_best:
+                t_best, best, best_srv = t, res, srv
+        lats = [best[k].latency_s for k in sorted(best)]
+        ok = all(r.ok for r in best.values())
+        for j, k in enumerate(sorted(best)):
+            r = best[k]
+            ok &= bool(np.array_equal(r.output_counts(),
+                                      reqs[j].expected_counts))
+            for a, b in zip(jax.tree.leaves(solo_states[j]),
+                            jax.tree.leaves(r.states)):
+                ok &= bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        rps = n_requests / t_best
+        if bucket >= 8:
+            ok &= rps / sq_rps >= 2.0  # the acceptance bar, in-band
+        rows.append({
+            "bucket": bucket, "n_requests": n_requests,
+            "serve_s": t_best, "req_per_s": rps,
+            "p99_ms": float(np.percentile(lats, 99)) * 1e3,
+            "sq_s": sq_total, "sq_req_per_s": sq_rps,
+            "sq_p99_ms": float(np.percentile(sq_lat, 99)) * 1e3,
+            "pll_req_per_s": pll_rps,
+            "pll_p99_ms": float(np.percentile(pll_lat, 99)) * 1e3,
+            "vs_sq": rps / sq_rps, "vs_pll": rps / pll_rps,
+            "dispatches": best_srv.dispatches,
+            "rounds": max(r.rounds for r in best.values()),
+            "correct": ok,
+        })
+    return rows
+
+
 def run_wide(sizes=WIDE_SIZES, t_steps=WIDE_T_STEPS, seed=4):
     """Naive vs spike-traffic-aware placement of a wide multi-crossbar net.
 
@@ -443,6 +562,8 @@ def main(out=print):
     o = run_trace_overhead()
     out(trace_line(o))
     out(faults_line(run_faults()))
+    for r in run_serve():
+        out(serve_line(r))
     wide = run_wide()
     wide_net = "x".join(str(s) for s in WIDE_SIZES)
     base = wide[0]
@@ -466,6 +587,20 @@ def trace_line(o):
             f" ok={o['identical']}")
 
 
+def serve_line(r):
+    mega_net = "x".join(str(s) for s in MEGA_SIZES)
+    return (f"serve/megaloop/{mega_net}/b{r['bucket']},"
+            f"{r['sq_s']*1e6:.0f},"
+            f"req_per_s={r['req_per_s']:.1f}"
+            f" p99_ms={r['p99_ms']:.1f}"
+            f" sq_req_per_s={r['sq_req_per_s']:.2f}"
+            f" sq_p99_ms={r['sq_p99_ms']:.0f}"
+            f" pll_req_per_s={r['pll_req_per_s']:.1f}"
+            f" vs_sq={r['vs_sq']:.2f}x vs_pll={r['vs_pll']:.2f}x"
+            f" n_req={r['n_requests']} dispatches={r['dispatches']}"
+            f" rounds={r['rounds']} ok={r['correct']}")
+
+
 def faults_line(f):
     mega_net = "x".join(str(s) for s in MEGA_SIZES)
     fids = "/".join(f"{x:.3f}" for x in f["fidelity"])
@@ -485,7 +620,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(
         description="SNN benchmark section (see benchmarks/README.md)")
     ap.add_argument("scenario", nargs="?", default="all",
-                    choices=("all", "faults", "trace"),
+                    choices=("all", "faults", "trace", "serve"),
                     help="run one scenario standalone (default: all)")
     ap.add_argument("--trace", action="store_true",
                     help="alias for the 'trace' scenario "
@@ -504,6 +639,9 @@ if __name__ == "__main__":
         _out(trace_line(run_trace_overhead()))
     elif args.scenario == "faults":
         _out(faults_line(run_faults()))
+    elif args.scenario == "serve":
+        for r in run_serve():
+            _out(serve_line(r))
     else:
         main(out=_out)
     if args.check:

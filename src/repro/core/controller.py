@@ -83,6 +83,7 @@ class Controller:
         self.dispatch_syncs = 0  # _HOST_FETCH calls from the fused loop
         self.trace_lost = 0      # events dropped to ring capacity
         self._events = []        # drained batches (np structured arrays)
+        self._finished = False   # a run() observed clean termination
         if self.obs is not None and "trace" not in self.states:
             cap = int(self.obs.capacity)
             self.states = {
@@ -352,52 +353,14 @@ class Controller:
                 f"{values.tolist()}{hint})")
 
     def _check_overflow(self, pending=None, states=None):
-        # loud overflow sentinels: merge_pending and the segment step keep
-        # sticky high-water marks of the capacity they needed; past-cap
-        # messages are silently lost (bulk appends/merges truncate, single
-        # appends clip onto the last slot), so any watermark beyond capacity
-        # means messages were dropped at some point — even if the box
-        # drained since
-        # graceful degradation (faults.FaultConfig(on_overflow="drop")):
-        # inbox/outbox overflow is counted spike loss, not an abort — only
-        # the program-bug flags (store log, late MMIO) below stay fatal
         drop = self.cfg.faults is not None and self.cfg.faults.drop_overflow
         pending = self._pending_stacked() if pending is None else pending
-        watermark = np.asarray(pending["max_count"])
-        if not drop and (watermark > self.cfg.in_cap).any():
-            raise RuntimeError(
-                "pending inbox overflow: "
-                f"{self._flag_detail('inbox', watermark, self.cfg.in_cap, 'in_cap')}; "
-                "raise in_cap (builder kwarg) or thin the workload's traffic"
-            )
         states = self._stacked() if states is None else states
-        out_peak = np.asarray(states["stats"]["outbox_peak"])
-        if not drop and (out_peak > self.cfg.out_cap).any():
-            raise RuntimeError(
-                "outbox overflow: "
-                f"{self._flag_detail('outbox', out_peak, self.cfg.out_cap, 'out_cap')}; "
-                "raise out_cap (builder kwarg) or thin the workload's traffic"
-            )
-        store_peak = np.asarray(states["stats"]["store_peak"])
-        if (store_peak > self.cfg.store_log).any():
-            raise RuntimeError(
-                "DRAM store-log overflow: "
-                f"{self._flag_detail('store_log', store_peak, self.cfg.store_log, 'store_log')}"
-                " stores in one quantum; raise store_log "
-                "(builder kwarg) or shrink the quantum"
-            )
-        mmio_late = np.asarray(states["stats"]["snn_mmio_late"])
-        if (mmio_late > 0).any():
-            raise RuntimeError(
-                "late SNN MMIO ops: "
-                f"{self._flag_detail('snn_mmio_late', mmio_late, 0)}: a "
-                "CIM_REG_SPIKE store executed at/after its target tick's grid "
-                "time, or a CIM_REG_COUNTS readback was served after the unit "
-                "ticked past the requested count — the result would depend on "
-                "round timing, not the tick grid.  Issue the op earlier in "
-                "the program, or raise tick_period (builder kwarg) so the "
-                "injection window covers it"
-            )
+        msg = overflow_error(states, pending, in_cap=self.cfg.in_cap,
+                             out_cap=self.cfg.out_cap,
+                             store_log=self.cfg.store_log, drop=drop)
+        if msg is not None:
+            raise RuntimeError(msg)
 
     def done(self) -> bool:
         """Termination check + loud overflow validation (one device sync).
@@ -523,6 +486,18 @@ class Controller:
         """
         t0 = _time.perf_counter()
         self._require_open()
+        if self._finished:
+            # re-entry on a finished controller: termination is final
+            # (platform.termination_flags — with an empty buffer and all
+            # neurons subthreshold, idling can never un-idle), so a second
+            # run() must be free.  The megaloop body unconditionally executes
+            # one round before its first check, and the per-round path rounds
+            # before checking too — without this short-circuit a re-entered
+            # run would burn a dispatch, mutate rounds_run/dispatches, and
+            # re-walk the watermark checks.  The serving loop
+            # (serve/snn_serve.py) calls run() repeatedly, so this is load
+            # bearing, not cosmetic.
+            return self.rounds_run, _time.perf_counter() - t0
         if rounds_per_dispatch < 1:
             raise ValueError("rounds_per_dispatch must be >= 1")
         if fused is None:
@@ -558,6 +533,7 @@ class Controller:
                 # a watermark tripped at a check point, or the loop exhausted
                 # max_rounds without the predicate ever seeing the last rounds
                 self._check_overflow()
+            self._finished = done and not over
         else:
             for r in range(max_rounds):
                 self.round()
@@ -572,6 +548,7 @@ class Controller:
                         if self.obs is not None:
                             self.drain_telemetry(on_telemetry)
                     if finished:
+                        self._finished = True
                         break
             else:
                 self._check_overflow()  # done() may never have seen the last rounds
@@ -604,3 +581,211 @@ class Controller:
         from repro.obs import metrics as obs_metrics
 
         return obs_metrics.collect(self._stacked(), self._pending_stacked())
+
+
+def overflow_error(states, pending, *, in_cap: int, out_cap: int,
+                   store_log: int, drop: bool = False):
+    """The detailed watermark error message, or ``None`` when clean.
+
+    Loud overflow sentinels: merge_pending and the segment step keep sticky
+    high-water marks of the capacity they needed; past-cap messages are
+    silently lost (bulk appends/merges truncate, single appends clip onto
+    the last slot), so any watermark beyond capacity means messages were
+    dropped at some point — even if the box drained since.  Under graceful
+    degradation (``faults.FaultConfig(on_overflow="drop")``, ``drop=True``)
+    inbox/outbox overflow is counted spike loss, not an abort — only the
+    program-bug flags (store log, late MMIO) stay fatal.
+
+    Module-level so both raisers share one formatter: ``Controller``
+    (fused and per-round paths — messages stay byte identical) and the
+    serving job axis (serve/snn_serve.py converts a job's flag into a
+    per-request error against the job's OWN caps instead of killing the
+    bucket).
+    """
+    watermark = np.asarray(pending["max_count"])
+    if not drop and (watermark > in_cap).any():
+        return (
+            "pending inbox overflow: "
+            f"{Controller._flag_detail('inbox', watermark, in_cap, 'in_cap')}; "
+            "raise in_cap (builder kwarg) or thin the workload's traffic"
+        )
+    out_peak = np.asarray(states["stats"]["outbox_peak"])
+    if not drop and (out_peak > out_cap).any():
+        return (
+            "outbox overflow: "
+            f"{Controller._flag_detail('outbox', out_peak, out_cap, 'out_cap')}; "
+            "raise out_cap (builder kwarg) or thin the workload's traffic"
+        )
+    store_peak = np.asarray(states["stats"]["store_peak"])
+    if (store_peak > store_log).any():
+        return (
+            "DRAM store-log overflow: "
+            f"{Controller._flag_detail('store_log', store_peak, store_log, 'store_log')}"
+            " stores in one quantum; raise store_log "
+            "(builder kwarg) or shrink the quantum"
+        )
+    mmio_late = np.asarray(states["stats"]["snn_mmio_late"])
+    if (mmio_late > 0).any():
+        return (
+            "late SNN MMIO ops: "
+            f"{Controller._flag_detail('snn_mmio_late', mmio_late, 0)}: a "
+            "CIM_REG_SPIKE store executed at/after its target tick's grid "
+            "time, or a CIM_REG_COUNTS readback was served after the unit "
+            "ticked past the requested count — the result would depend on "
+            "round timing, not the tick grid.  Issue the op earlier in "
+            "the program, or raise tick_period (builder kwarg) so the "
+            "injection window covers it"
+        )
+    return None
+
+
+# ---------------------------------------------------------------------------
+# job-axis megaloop (fleet serving — serve/snn_serve.py)
+#
+# The Controller vmaps over the *segments of one platform*; serving stacks a
+# second leading axis of J independent platforms ("jobs") and runs them all
+# inside ONE device-resident while_loop.  The jobs share a compiled shape
+# (one VPConfig) but carry their own rasters, weights, fault seeds/masks and
+# trace rings in the stacked state.
+#
+# vmap-of-while_loop would be wrong here: JAX batches a while_loop by running
+# the body while ANY lane's cond holds, WITHOUT masking the finished lanes —
+# a done job would keep mutating.  So the job loop is a single while_loop
+# whose carry holds per-job (done, over, rounds) vectors and freezes finished
+# jobs functionally: every state/pending leaf is `where(active, new, old)`.
+# A frozen job's final state is its state at the first check round that saw
+# it done — the same round its solo run stops at — so batched results are
+# bit-identical to solo runs under the same (r0, check_every) cadence.
+#
+# Per-job caps ride as (J,) traced operands into the vmapped termination
+# flags (platform.job_termination_flags): a cap-padded bucket (physical boxes
+# sized to the bucket maximum) still trips each job's watermark against its
+# OWN cap, at the same check round as solo.
+
+_JOB_FN_CACHE: dict = {}  # (cfg, quantum, obs) -> jitted batched megaloop
+
+
+def _job_megaloop(cfg, quantum, obs):
+    step = pf.make_segment_step(cfg, quantum, obs)
+    s = cfg.n_segments
+    lat = cfg.latency_matrix()
+    big = jnp.int32(2**30)
+
+    def limits(times):
+        tl = times[:, None] + lat
+        tl = jnp.where(jnp.eye(s, dtype=bool), big, tl)
+        lim = tl.min(axis=0)
+        if s == 1:
+            lim = times + quantum
+        return lim
+
+    def vmap_round(states, pending):
+        lim = limits(states["time"])
+        states, outboxes, pending = jax.vmap(step)(states, pending, lim)
+        fresh = ch.route(outboxes, lat, cfg.in_cap)
+        pending = jax.vmap(ch.merge_pending)(pending, fresh)
+        return states, pending
+
+    job_round = jax.vmap(vmap_round)
+
+    def mega(states, pending, rounds, done, over,
+             in_cap, out_cap, store_log, r0, k, check_every):
+        """One dispatch of the batched job loop.
+
+        ``states``/``pending`` are (J, S, ...) stacks; ``rounds``/``done``/
+        ``over`` are the (J,) per-job carries from the previous dispatch
+        (zeros/False for a fresh batch — padding lanes enter with
+        ``done=True`` and are frozen from the first round); the caps are
+        (J,) int32 per-job capacities.  ``r0`` is the shared round count of
+        the still-active jobs (active jobs are lockstep: they have all been
+        active since round 0, so they share one cadence) and ``check_every``
+        the check period, exactly as in ``Controller.run``.  Returns
+        ``(states, pending, rounds, done, over)``; the scalar iteration
+        count stays internal so the sharded variant's outputs are all
+        per-job.
+        """
+
+        def cond(carry):
+            _st, _pen, i, _r, done, over = carry
+            return jnp.any(~(done | over)) & (i < k)
+
+        def body(carry):
+            st, pen, i, rounds, done, over = carry
+            active = ~(done | over)
+
+            def freeze(new, old):
+                keep = lambda n, o: jnp.where(
+                    active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+                return jax.tree.map(keep, new, old)
+
+            st_n, pen_n = job_round(st, pen)
+            st, pen = freeze(st_n, st), freeze(pen_n, pen)
+            rounds = rounds + active.astype(jnp.int32)
+            i = i + 1
+            at_check = ((r0 + i) % check_every) == 0
+
+            def checked(_):
+                d, in_o, out_o, st_o, late, _tr = pf.job_termination_flags(
+                    st, pen, in_cap, out_cap, store_log)
+                # same policy split as the solo megaloop: under the
+                # graceful-degradation overflow policy the channel
+                # watermarks are counted loss, not aborts
+                if cfg.faults is not None and cfg.faults.drop_overflow:
+                    o = st_o | late
+                else:
+                    o = in_o | out_o | st_o | late
+                return d & ~o, o
+
+            d, o = jax.lax.cond(
+                at_check, checked,
+                lambda _: (jnp.zeros_like(done), jnp.zeros_like(over)), None)
+            done = done | (active & d)
+            over = over | (active & o)
+            return st, pen, i, rounds, done, over
+
+        st, pen, _i, rounds, done, over = jax.lax.while_loop(
+            cond, body, (states, pending, jnp.int32(0), rounds, done, over))
+        return st, pen, rounds, done, over
+
+    return mega
+
+
+def job_mega_fn(cfg, quantum: int = 10_000, obs=None):
+    """Cached jitted job-axis megaloop for ``cfg`` (single device).
+
+    The jit retraces per batch size J, so one cache entry serves every
+    bucket size of a workload shape — same lifetime story as
+    ``_FN_CACHE``.
+    """
+    key = (cfg, quantum, obs)
+    if key not in _JOB_FN_CACHE:
+        _JOB_FN_CACHE[key] = jax.jit(
+            _job_megaloop(cfg, quantum, obs), donate_argnums=(0, 1))
+    return _JOB_FN_CACHE[key]
+
+
+def sharded_job_mega_fn(cfg, mesh, quantum: int = 10_000, obs=None,
+                        axis: str = "jobs"):
+    """The job megaloop fanned across ``mesh`` devices over the job axis.
+
+    Each device runs the batched while_loop on its local job shard
+    independently — there are no collectives inside a round (routing is
+    within-platform), so a device whose jobs all finish exits its loop
+    early while the others keep running.  J must divide the mesh axis
+    (the server pads buckets with inert ``done=True`` lanes to arrange
+    that).  Mesh-dependent, so per-call rather than in the global cache —
+    mirrors Controller's per-instance ``_shard_mega``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    mega = _job_megaloop(cfg, quantum, obs)
+    job = P(axis)
+    rep = P()
+    fn = shard_map(
+        mega, mesh=mesh,
+        in_specs=(job, job, job, job, job, job, job, job, rep, rep, rep),
+        out_specs=(job, job, job, job, job),
+    )
+    return jax.jit(fn, donate_argnums=(0, 1))

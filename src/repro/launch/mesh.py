@@ -22,3 +22,19 @@ def make_test_mesh(data: int = 2, model: int = 2):
 
 def chips(mesh) -> int:
     return mesh.devices.size
+
+
+def make_serve_mesh(n_devices: int | None = None):
+    """Flat 1-D serving mesh over the host's local devices, axis ``jobs``.
+
+    The serving job axis (core/controller.py ``sharded_job_mega_fn``,
+    serve/snn_serve.py) is embarrassingly parallel — no collectives inside
+    a round, each device runs its job shard's while_loop independently —
+    so the mesh is one axis wide and sized to whatever devices this host
+    actually has (or ``n_devices``, e.g. under
+    ``--xla_force_host_platform_device_count``).
+    """
+    import jax
+
+    n = n_devices or len(jax.devices())
+    return make_mesh((n,), ("jobs",))

@@ -26,19 +26,61 @@ def make_decode_step(model, mesh=None):
     return decode_step
 
 
+def cache_seq_axes(cfg, cache, seq: int, batch: int):
+    """Per-leaf index of the sequence axis in a decode cache, or None for
+    leaves that are not sequence-addressed.
+
+    Derived from ``models.model.cache_specs`` — the layout's single source
+    of truth — instead of shape matching: the specs are probed at two
+    sequence lengths (``kind="decode"``, so an encdec cross cache keeps its
+    fixed ``n_audio_frames`` memory length) and the axis whose size moved
+    is the sequence axis.  Shape heuristics are wrong exactly when an
+    unrelated axis collides with the prompt length: an SSM conv/state cell
+    ``(n_stack, B, d, N)`` has the *batch* axis at the position a KV cell
+    keeps its sequence axis, so ``batch == prompt_len`` made the old
+    ``x.shape[-3] == seq`` test pad the batch (regression-pinned in
+    tests/test_serve.py).
+    """
+    from repro.configs.base import ShapeConfig
+    from repro.models.model import cache_specs
+
+    def probe(s):
+        sds, _ = cache_specs(cfg, ShapeConfig("probe", s, batch, "decode"))
+        return jax.tree.leaves(sds)
+
+    lo, hi = probe(seq), probe(seq + 1)
+    leaves = jax.tree.leaves(cache)
+    assert len(lo) == len(leaves), (
+        f"cache_specs tree ({len(lo)} leaves) does not match the live "
+        f"decode cache ({len(leaves)} leaves)")
+    axes = []
+    for la, lb, leaf in zip(lo, hi, leaves):
+        assert la.ndim == lb.ndim == leaf.ndim
+        moved = [i for i, (a, b) in enumerate(zip(la.shape, lb.shape))
+                 if a != b]
+        assert len(moved) <= 1, (la.shape, lb.shape)
+        axes.append(moved[0] if moved else None)
+    return axes
+
+
 def greedy_generate(model, params, batch, steps: int, mesh=None, pad_to: int | None = None):
     """Simple greedy loop for examples/tests: prefill then `steps` decode steps."""
     cache, lg = model.prefill(params, batch, mesh=mesh)
     seq = batch["tokens"].shape[1]
     if pad_to:
-        def pad_seq(x):
-            if x.ndim >= 4 and x.shape[-3] == seq:
-                pad = [(0, 0)] * x.ndim
-                pad[-3] = (0, pad_to - seq)
-                return jnp.pad(x, pad)
-            return x
+        axes = cache_seq_axes(model.cfg, cache, seq,
+                              batch["tokens"].shape[0])
+        flat, treedef = jax.tree.flatten(cache)
 
-        cache = jax.tree.map(pad_seq, cache)
+        def pad_seq(x, ax):
+            if ax is None or x.shape[ax] >= pad_to:
+                return x
+            pad = [(0, 0)] * x.ndim
+            pad[ax] = (0, pad_to - x.shape[ax])
+            return jnp.pad(x, pad)
+
+        cache = jax.tree.unflatten(
+            treedef, [pad_seq(x, ax) for x, ax in zip(flat, axes)])
     toks = [jnp.argmax(lg[:, -1], axis=-1)]
     b = batch["tokens"].shape[0]
 

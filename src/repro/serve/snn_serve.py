@@ -1,0 +1,324 @@
+"""Fleet-scale SNN serving: batch independent inference jobs through one
+device-resident megaloop.
+
+The VP so far runs ONE experiment well: a platform's segments stack under
+``vmap`` and the fused megaloop burns through rounds with one host sync per
+dispatch (core/controller.py).  Serving traffic is the opposite shape —
+thousands of small *independent* requests (NeuroVM's multi-tenant framing:
+time-slice the neuromorphic fabric between tenants without leaving the
+device; GPU-RANC batches thousands of cores into one vectorized step).  One
+request per dispatch would leave the device mostly idle and pay a full host
+round-trip per job.
+
+This module adds the *job axis*:
+
+* ``SnnRequest`` — one built platform (cfg, states, pending, meta), e.g.
+  from ``snn.workloads.serve_request``.
+* ``SnnServer.submit`` — admission queue: stamps arrival time, returns a
+  ticket.
+* ``SnnServer.flush`` — buckets the queue by compiled shape, pads each
+  bucket, and runs it as ONE jitted batched megaloop
+  (``controller.job_mega_fn``): per-job termination flags, per-job
+  watermarks against each request's own caps, per-job fault seeds and
+  trace rings riding in the stacked state.  With a mesh, buckets fan
+  across devices via ``shard_map`` (``controller.sharded_job_mega_fn`` +
+  ``launch.mesh.make_serve_mesh``).
+
+Bucketing rules (docs/serving.md):
+
+* **Same compiled shape.** Two requests share a bucket iff their configs
+  match after *normalization* — the transport fault seed is replaced by 0
+  (the seed rides the stacked state, never the compiled program) and the
+  channel caps are dropped (they become per-job traced operands).  Static
+  fault gates (which fault families exist, their rates, the overflow
+  policy) stay in the key: they select compiled code.
+* **Cap padding.** A bucket's physical boxes are sized to the bucket
+  maximum; each job is judged against its OWN caps by the vmapped
+  termination flags, so an overflowing job fails at the same check round
+  with the same watermark message as its solo run.  Exception: under
+  ``on_overflow="drop"`` capacity *changes deterministic spike loss*, so
+  drop-policy requests bucket only with exactly-equal caps (caps stay in
+  the key).
+* **Padding lanes.** Buckets are padded to a fixed batch size (and to the
+  mesh's job-axis multiple) by replicating lane 0 with ``done=True`` —
+  frozen from round 0, zero simulated effect.
+
+Results are bit-identical to running each request solo with the same
+``check_every`` cadence (tests/test_serve.py proves it across all four
+backends and both dispatch paths); a finished job freezes at the first
+check round that saw it done — exactly where its solo run stops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controller as ctl
+from repro.obs import trace as obs_trace
+
+
+@dataclasses.dataclass
+class SnnRequest:
+    """One admission-ready inference job: a built platform plus its meta.
+
+    ``expected_counts`` is optional oracle output (per output unit) carried
+    for end-to-end verification — the server never reads it.
+    """
+    cfg: object
+    states: object
+    pending: object
+    meta: dict
+    expected_counts: tuple | None = None
+
+
+@dataclasses.dataclass
+class SnnResult:
+    """Outcome of one served request.
+
+    ``ok=False`` carries the same watermark message the request's solo
+    ``Controller.run`` would have raised (per-job caps), or a max_rounds
+    exhaustion note.  ``latency_s`` is wall time from ``submit`` to the
+    request's bucket completing — the serving latency the p99 metric is
+    over, not simulated time.
+    """
+    request_id: int
+    ok: bool
+    error: str | None
+    rounds: int
+    latency_s: float
+    states: object
+    meta: dict
+    events: object = None   # drained telemetry (np EVENT_DTYPE), obs only
+    trace_lost: int = 0
+
+    def output_counts(self):
+        """Per-output-unit spike counts (topology.output_spike_counts)."""
+        from repro.snn import topology as topo
+
+        return topo.output_spike_counts(self.states, self.meta)
+
+
+def _normalize(cfg):
+    """The bucket key: cfg with per-job-able fields factored out."""
+    fc = cfg.faults
+    if fc is not None:
+        fc = dataclasses.replace(fc, seed=0)
+    if fc is not None and fc.drop_overflow:
+        # capacity changes deterministic spike loss under the drop policy:
+        # caps must match exactly, so they stay in the key
+        return dataclasses.replace(cfg, faults=fc)
+    return dataclasses.replace(cfg, faults=fc,
+                               in_cap=0, out_cap=0, store_log=0)
+
+
+def _pad_pending(pending, cap: int):
+    """Grow a (S, cap0) pending box to the bucket's in_cap.
+
+    Freshly padded slots carry channel.empty_pending defaults (zeros,
+    valid=False) — dead slots are never read, so this is shape-only.
+    """
+    cur = pending["valid"].shape[-1]
+    if cur == cap:
+        return pending
+    grow = ((0, 0), (0, cap - cur))
+    out = dict(pending)
+    for f in ("kind", "addr", "data", "t_avail", "valid"):
+        out[f] = jnp.pad(pending[f], grow)
+    return out
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *v: jnp.stack(v), *trees)
+
+
+def _lane(tree, j):
+    return jax.tree.map(lambda x: x[j], tree)
+
+
+class SnnServer:
+    """Admission queue + bucketed batch execution for SNN inference jobs.
+
+    ``submit`` is cheap (append + timestamp); all device work happens in
+    ``flush``, which serves every queued request and returns
+    ``{ticket: SnnResult}``.  ``bucket_size`` caps how many jobs share one
+    batched megaloop; larger buckets amortize dispatch overhead but pad
+    more when the queue is ragged.  With ``mesh`` (a 1-D "jobs" mesh from
+    ``launch.mesh.make_serve_mesh``) each bucket is sharded across the
+    mesh devices, so ``bucket_size`` must be a multiple of the mesh size.
+
+    ``check_every`` fixes the termination-check cadence for every bucket —
+    the bit-exactness contract is against solo runs at the SAME cadence.
+    """
+
+    def __init__(self, *, quantum: int = 10_000, check_every: int = 4,
+                 rounds_per_dispatch: int = 256, max_rounds: int = 10_000,
+                 bucket_size: int = 8, mesh=None, obs=None):
+        if bucket_size < 1:
+            raise ValueError("bucket_size must be >= 1")
+        if mesh is not None:
+            n = int(np.prod(mesh.devices.shape))
+            if bucket_size % n:
+                raise ValueError(
+                    f"bucket_size={bucket_size} must be a multiple of the "
+                    f"mesh's {n} devices (shard_map splits the job axis "
+                    "evenly)")
+        self.quantum = quantum
+        self.check_every = check_every
+        self.rounds_per_dispatch = rounds_per_dispatch
+        self.max_rounds = max_rounds
+        self.bucket_size = bucket_size
+        self.mesh = mesh
+        self.obs = obs
+        self.dispatches = 0      # batched megaloop dispatches issued
+        self.dispatch_syncs = 0  # host fetches from the serving loop
+        self.served = 0          # requests completed over the server's life
+        self._queue = []         # (ticket, SnnRequest, t_submit)
+        self._next_id = 0
+        self._sharded_cache = {}  # (bucket_cfg) -> jitted sharded megaloop
+
+    # -- admission ------------------------------------------------------
+    def submit(self, request: SnnRequest) -> int:
+        """Queue one request; returns its ticket (key into flush()'s dict)."""
+        ticket = self._next_id
+        self._next_id += 1
+        self._queue.append((ticket, request, _time.perf_counter()))
+        return ticket
+
+    def __len__(self):
+        return len(self._queue)
+
+    # -- batching -------------------------------------------------------
+    def _pad_width(self, n: int) -> int:
+        """Lanes per bucket: next power of two (bounds the jit retrace count
+        per cfg to log2(bucket_size) batch shapes), or the exact bucket
+        size under a mesh (the job axis must split evenly)."""
+        if self.mesh is not None:
+            return self.bucket_size
+        w = 1
+        while w < n:
+            w *= 2
+        return min(w, self.bucket_size)
+
+    def _mega(self, bucket_cfg):
+        if self.mesh is None:
+            return ctl.job_mega_fn(bucket_cfg, self.quantum, self.obs)
+        if bucket_cfg not in self._sharded_cache:
+            self._sharded_cache[bucket_cfg] = ctl.sharded_job_mega_fn(
+                bucket_cfg, self.mesh, self.quantum, self.obs)
+        return self._sharded_cache[bucket_cfg]
+
+    # -- execution ------------------------------------------------------
+    def flush(self) -> dict:
+        """Serve every queued request; returns ``{ticket: SnnResult}``."""
+        results = {}
+        queue, self._queue = self._queue, []
+        for key_cfg, entries in self._buckets_of(queue):
+            results.update(self._run_bucket(key_cfg, entries))
+        return results
+
+    def _buckets_of(self, queue):
+        """Group by normalized cfg (first-seen order — dict preserves
+        insertion; submission order within a group), chunk to
+        bucket_size."""
+        groups: dict = {}
+        for entry in queue:
+            groups.setdefault(_normalize(entry[1].cfg), []).append(entry)
+        for key_cfg, entries in groups.items():
+            for i in range(0, len(entries), self.bucket_size):
+                yield key_cfg, entries[i:i + self.bucket_size]
+
+    def _run_bucket(self, key_cfg, entries):
+        reqs = [e[1] for e in entries]
+        bucket_cfg = dataclasses.replace(
+            key_cfg,
+            in_cap=max(r.cfg.in_cap for r in reqs),
+            out_cap=max(r.cfg.out_cap for r in reqs),
+            store_log=max(r.cfg.store_log for r in reqs),
+        )
+        n = len(entries)
+        width = self._pad_width(n)
+
+        def prep(req):
+            st = req.states
+            if self.obs is not None and "trace" not in st:
+                cap = int(self.obs.capacity)
+                st = {**st, "trace": jax.vmap(
+                    lambda _: obs_trace.ring_state(cap))(
+                        jnp.arange(bucket_cfg.n_segments))}
+            return st, _pad_pending(req.pending, bucket_cfg.in_cap)
+
+        lanes = [prep(r) for r in reqs]
+        lanes += [lanes[0]] * (width - n)  # inert padding lanes (done0=True)
+        states = _stack([l[0] for l in lanes])
+        pending = _stack([l[1] for l in lanes])
+
+        pad = lambda vals: jnp.asarray(
+            list(vals) + [vals[0]] * (width - n), jnp.int32)
+        in_cap = pad([r.cfg.in_cap for r in reqs])
+        out_cap = pad([r.cfg.out_cap for r in reqs])
+        store_log = pad([r.cfg.store_log for r in reqs])
+
+        rounds = jnp.zeros((width,), jnp.int32)
+        done = jnp.arange(width) >= n   # padding lanes frozen from round 0
+        over = jnp.zeros((width,), bool)
+        mega = self._mega(bucket_cfg)
+
+        per_job_events = [[] for _ in range(n)]
+        per_job_lost = [0] * n
+        ran = 0
+        while ran < self.max_rounds:
+            k = min(self.rounds_per_dispatch, self.max_rounds - ran)
+            states, pending, rounds, done, over = mega(
+                states, pending, rounds, done, over,
+                in_cap, out_cap, store_log,
+                jnp.int32(ran), jnp.int32(k), jnp.int32(self.check_every))
+            self.dispatches += 1
+            self.dispatch_syncs += 1
+            # one host sync per dispatch — scalars and the telemetry rings
+            # come back in a single transfer, like Controller.run
+            if self.obs is None:
+                rounds_h, done_h, over_h = ctl._HOST_FETCH(
+                    (rounds, done, over))
+            else:
+                rounds_h, done_h, over_h, ring = ctl._HOST_FETCH(
+                    (rounds, done, over, states["trace"]))
+                for j in range(n):
+                    ev, lost = obs_trace.drain(_lane(ring, j))
+                    per_job_lost[j] += lost
+                    if len(ev):
+                        per_job_events[j].append(ev)
+                states = {**states,
+                          "trace": obs_trace.reset(states["trace"])}
+            prev, ran = ran, int(rounds_h.max())
+            if (done_h | over_h).all() or ran == prev:
+                break
+        t_done = _time.perf_counter()
+
+        out = {}
+        for j, (ticket, req, t_submit) in enumerate(entries):
+            st_j, pen_j = _lane(states, j), _lane(pending, j)
+            error = None
+            if bool(over_h[j]) or not bool(done_h[j]):
+                drop = (req.cfg.faults is not None
+                        and req.cfg.faults.drop_overflow)
+                error = ctl.overflow_error(
+                    st_j, pen_j, in_cap=req.cfg.in_cap,
+                    out_cap=req.cfg.out_cap, store_log=req.cfg.store_log,
+                    drop=drop)
+                if error is None:
+                    error = (f"max_rounds={self.max_rounds} exhausted "
+                             "before termination")
+            events = (np.concatenate(per_job_events[j])
+                      if per_job_events[j] else
+                      np.empty(0, obs_trace.EVENT_DTYPE))
+            out[ticket] = SnnResult(
+                request_id=ticket, ok=error is None, error=error,
+                rounds=int(rounds_h[j]), latency_s=t_done - t_submit,
+                states=st_j, meta=req.meta, events=events,
+                trace_lost=per_job_lost[j])
+            self.served += 1
+        return out

@@ -887,3 +887,22 @@ def termination_flags(states, pending, in_cap: int, out_cap: int,
     trace_over = (states["trace"]["overflowed"].any() if "trace" in states
                   else jnp.array(False))
     return done, inbox_over, outbox_over, store_over, mmio_late, trace_over
+
+
+def job_termination_flags(states, pending, in_cap, out_cap, store_log):
+    """Per-job ``termination_flags`` over a leading *job* axis.
+
+    ``states``/``pending`` are ``(J, S, ...)`` stacks of J independent
+    platforms (the serving job axis — core/controller.py's
+    ``_job_megaloop``); the caps are ``(J,)`` int32 arrays, so every job is
+    judged against its *own* capacities.  Everything in
+    ``termination_flags`` is traced comparisons against the caps — nothing
+    shapes on them — which is what makes cap-padded serving buckets legal:
+    the physical boxes are sized to the bucket maximum, but a job whose
+    demand exceeds its own (smaller) cap still trips its watermark at
+    exactly the check round its solo run would, with the identical
+    true-demand watermark value in the host-side error.  Returns six
+    ``(J,)`` bool arrays in ``termination_flags`` order.
+    """
+    return jax.vmap(termination_flags)(states, pending, in_cap, out_cap,
+                                       store_log)

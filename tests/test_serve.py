@@ -1,0 +1,417 @@
+"""Fleet serving (serve/snn_serve.py) and the serving-path bugfixes.
+
+The serving contract is bit-exactness: a batched bucket's per-job results
+— final states, pending boxes, round counts, watermark errors — must be
+bit-identical to running each request solo at the same ``check_every``
+cadence, on every backend and both dispatch paths (docs/serving.md).  On
+top of the conformance cells this file pins the three serving-path bugs:
+``greedy_generate``'s shape-heuristic cache padding, ``Controller.run``
+re-entry on a finished controller, and stats/metrics/telemetry
+accumulation across multiple ``run()`` calls.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.controller import Controller
+from repro.serve.snn_serve import SnnServer, _normalize
+from repro.snn import workloads as wl
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+QUANTUM = 10_000
+CHECK_EVERY = 4
+MAX_ROUNDS = 300
+SIZES = (12, 10, 8)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    # 5 requests -> the 8-wide bucket runs with 3 inert padding lanes
+    return wl.serve_fleet(5, SIZES, seed=3)
+
+
+@pytest.fixture(scope="module")
+def served(fleet):
+    srv = SnnServer(bucket_size=8, check_every=CHECK_EVERY,
+                    max_rounds=MAX_ROUNDS, quantum=QUANTUM)
+    tickets = [srv.submit(r) for r in fleet]
+    return tickets, srv.flush()
+
+
+def solo(req, backend, fused):
+    ctl = Controller(req.cfg, req.states, req.pending, backend=backend,
+                     quantum=QUANTUM)
+    rounds, _ = ctl.run(max_rounds=MAX_ROUNDS, check_every=CHECK_EVERY,
+                        fused=fused)
+    return rounds, ctl.result_states()
+
+
+def assert_states_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# serving conformance: batched == solo, bit for bit
+
+
+@pytest.mark.parametrize("backend,fused", [
+    ("sequential", False), ("threads", False),
+    ("vmap", False), ("vmap", True),
+])
+def test_bucket_matches_solo(fleet, served, backend, fused):
+    tickets, results = served
+    for t, req in zip(tickets, fleet):
+        res = results[t]
+        assert res.ok, res.error
+        rounds, states = solo(req, backend, fused)
+        assert res.rounds == rounds
+        assert_states_equal(res.states, states)
+        assert res.output_counts().tolist() == list(req.expected_counts)
+
+
+def test_shard_map_bucket_matches_solo(subproc):
+    subproc(
+        """
+import jax, numpy as np
+from repro.core.controller import Controller
+from repro.launch.mesh import make_serve_mesh
+from repro.serve.snn_serve import SnnServer
+from repro.snn import workloads as wl
+
+reqs = wl.serve_fleet(6, (12, 10, 8), seed=11)
+srv = SnnServer(bucket_size=8, mesh=make_serve_mesh(), check_every=4,
+                max_rounds=300)
+tickets = [srv.submit(r) for r in reqs]
+res = srv.flush()
+solo = wl.serve_fleet(6, (12, 10, 8), seed=11)
+for t, req in zip(tickets, solo):
+    assert res[t].ok, res[t].error
+    ctl = Controller(req.cfg, req.states, req.pending, backend="vmap",
+                     quantum=10_000)
+    rounds, _ = ctl.run(max_rounds=300, check_every=4)
+    assert res[t].rounds == rounds
+    for a, b in zip(jax.tree.leaves(ctl.result_states()),
+                    jax.tree.leaves(res[t].states)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert res[t].output_counts().tolist() == list(req.expected_counts)
+print("sharded serving == solo, 6 jobs over 4 devices")
+""",
+        n_devices=4,
+    )
+
+
+def test_mixed_caps_one_bucket():
+    """Pad-compatible caps: one bucket, per-job watermark semantics."""
+    ra = wl.serve_request(SIZES, seed=100, in_cap=128, out_cap=64)
+    rb = wl.serve_request(SIZES, seed=101, in_cap=256, out_cap=128)
+    assert _normalize(ra.cfg) == _normalize(rb.cfg)
+    srv = SnnServer(bucket_size=2, check_every=CHECK_EVERY,
+                    max_rounds=MAX_ROUNDS)
+    ta, tb = srv.submit(ra), srv.submit(rb)
+    res = srv.flush()
+    assert srv.dispatches >= 1 and len(res) == 2
+    for t, req in ((ta, ra), (tb, rb)):
+        assert res[t].ok, res[t].error
+        rounds, states = solo(req, "vmap", True)
+        assert res[t].rounds == rounds
+        assert_states_equal(res[t].states, states)
+
+
+def test_per_job_fault_seeds_one_bucket():
+    """Different FaultConfig seeds batch together (the seed rides the
+    stacked state, not the compiled program) and reproduce their solo
+    faulted runs bit for bit."""
+    from repro.faults import FaultConfig
+
+    build = lambda: [
+        wl.serve_request(SIZES, seed=7, t_steps=6,
+                         faults=FaultConfig(seed=s, p_spike_drop=0.1))
+        for s in (1, 2)
+    ]
+    reqs = build()
+    assert reqs[0].cfg != reqs[1].cfg  # seeds differ in cfg...
+    assert _normalize(reqs[0].cfg) == _normalize(reqs[1].cfg)  # ...not in key
+    srv = SnnServer(bucket_size=2, check_every=CHECK_EVERY,
+                    max_rounds=MAX_ROUNDS)
+    tickets = [srv.submit(r) for r in reqs]
+    res = srv.flush()
+    for t, req in zip(tickets, build()):
+        assert res[t].ok, res[t].error
+        rounds, states = solo(req, "vmap", True)
+        assert res[t].rounds == rounds
+        assert_states_equal(res[t].states, states)
+
+
+def _overflowing_request():
+    """A request whose traffic overflows its own (tiny) inbox cap mid-run:
+    the raster passes the build-time check (small input layer) but the
+    wide hidden layer's one-tick fan-out exceeds in_cap.  Seed 13 is a
+    known hit; the loop keeps the recipe robust to builder drift."""
+    for t_steps in (2, 3):
+        for seed in (13, *range(20)):
+            try:
+                build = lambda: wl.serve_request(
+                    (8, 64, 8), t_steps=t_steps, rate=0.9, seed=seed,
+                    in_cap=48)
+                req = build()
+            except AssertionError:
+                continue
+            try:
+                solo(req, "vmap", True)
+            except RuntimeError as e:
+                return build(), str(e)
+    pytest.skip("no overflowing workload found in the search budget")
+
+
+def test_overflow_is_per_request_not_per_bucket():
+    """One job's watermark abort becomes ok=False with the SOLO error
+    message (same caps, same true-demand watermark); its bucket mates
+    still complete exactly."""
+    bad, solo_msg = _overflowing_request()
+    # co-bucket the bad job with a healthy same-topology neighbor (shared
+    # compiled shape) and a different-topology job (its own bucket)
+    mate = wl.serve_request((8, 64, 8), t_steps=2, rate=0.2, seed=1000,
+                            in_cap=256)
+    good = wl.serve_request(SIZES, seed=5)
+    srv = SnnServer(bucket_size=4, check_every=CHECK_EVERY,
+                    max_rounds=MAX_ROUNDS)
+    tb, tm, tg = srv.submit(bad), srv.submit(mate), srv.submit(good)
+    res = srv.flush()
+    assert not res[tb].ok
+    assert res[tb].error == solo_msg, (res[tb].error, solo_msg)
+    assert res[tm].ok, res[tm].error
+    assert res[tm].output_counts().tolist() == list(mate.expected_counts)
+    assert res[tg].ok and (res[tg].output_counts().tolist()
+                           == list(good.expected_counts))
+
+
+def test_padding_lanes_are_inert(fleet, served):
+    """5 jobs in an 8-wide bucket: identical results at exact width."""
+    tickets, results = served
+    srv = SnnServer(bucket_size=5, check_every=CHECK_EVERY,
+                    max_rounds=MAX_ROUNDS)
+    fleet2 = wl.serve_fleet(5, SIZES, seed=3)
+    t2 = [srv.submit(r) for r in fleet2]
+    res2 = srv.flush()
+    for a, b in zip(tickets, t2):
+        assert results[a].rounds == res2[b].rounds
+        assert_states_equal(results[a].states, res2[b].states)
+
+
+def test_serve_with_telemetry(fleet):
+    """Per-job trace rings: events drain per request, and tracing is
+    bit-invisible to the served results."""
+    from repro.obs import TraceConfig
+
+    srv = SnnServer(bucket_size=8, check_every=CHECK_EVERY,
+                    max_rounds=MAX_ROUNDS, obs=TraceConfig(capacity=4096))
+    fleet2 = wl.serve_fleet(5, SIZES, seed=3)
+    tickets = [srv.submit(r) for r in fleet2]
+    res = srv.flush()
+    for t, req in zip(tickets, fleet):
+        assert res[t].ok, res[t].error
+        rounds, states = solo(req, "vmap", True)
+        assert res[t].rounds == rounds
+        # traced state minus the ring == untraced state
+        untraced = {k: v for k, v in res[t].states.items() if k != "trace"}
+        assert_states_equal(untraced, states)
+        assert len(res[t].events) > 0
+        assert res[t].trace_lost == 0
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=6, deadline=None)
+    @given(n=st.integers(1, 6), seed=st.integers(0, 50),
+           bucket=st.sampled_from([2, 4, 8]))
+    def test_property_batched_equals_solo(n, seed, bucket):
+        reqs = wl.serve_fleet(n, SIZES, seed=seed)
+        srv = SnnServer(bucket_size=bucket, check_every=CHECK_EVERY,
+                        max_rounds=MAX_ROUNDS)
+        tickets = [srv.submit(r) for r in reqs]
+        res = srv.flush()
+        for t, req in zip(tickets, wl.serve_fleet(n, SIZES, seed=seed)):
+            assert res[t].ok, res[t].error
+            rounds, states = solo(req, "vmap", True)
+            assert res[t].rounds == rounds
+            assert_states_equal(res[t].states, states)
+
+
+# ---------------------------------------------------------------------------
+# bugfix: Controller.run re-entry on a finished controller
+
+
+@pytest.mark.parametrize("backend,fused", [
+    ("sequential", False), ("threads", False),
+    ("vmap", False), ("vmap", True),
+])
+def test_run_reentry_is_free(backend, fused):
+    req = wl.serve_request(SIZES, seed=3)
+    ctl = Controller(req.cfg, req.states, req.pending, backend=backend,
+                     quantum=QUANTUM)
+    rounds, _ = ctl.run(max_rounds=MAX_ROUNDS, check_every=CHECK_EVERY,
+                        fused=fused)
+    before = (rounds, ctl.dispatches, ctl.dispatch_syncs,
+              ctl.sim_time().copy(), ctl.result_states())
+    rounds2, _ = ctl.run(max_rounds=MAX_ROUNDS, check_every=CHECK_EVERY,
+                         fused=fused)
+    assert rounds2 == rounds
+    assert ctl.rounds_run == rounds
+    assert ctl.dispatches == before[1]       # no dispatch burned
+    assert ctl.dispatch_syncs == before[2]   # no extra host sync
+    np.testing.assert_array_equal(ctl.sim_time(), before[3])
+    assert_states_equal(ctl.result_states(), before[4])
+
+
+def test_run_reentry_continues_unfinished():
+    """The short-circuit must key on CLEAN termination, not on having run:
+    a partial run (max_rounds hit early) must continue when re-entered —
+    that is the serving loop's incremental-run flow."""
+    req = wl.serve_request(SIZES, seed=3)
+    ctl = Controller(req.cfg, req.states, req.pending, backend="vmap",
+                     quantum=QUANTUM)
+    ctl.run(max_rounds=CHECK_EVERY, check_every=CHECK_EVERY)
+    assert not ctl._finished
+    rounds, _ = ctl.run(max_rounds=MAX_ROUNDS, check_every=CHECK_EVERY)
+    ref, states = solo(req, "vmap", True)
+    assert rounds == ref
+    assert_states_equal(ctl.result_states(), states)
+
+
+# ---------------------------------------------------------------------------
+# bugfix audit: stats()/metrics()/telemetry across multiple run() calls
+
+
+def test_counters_accumulate_across_runs():
+    """Counters are cumulative device state: a run split in two at a
+    check_every boundary reports the same stats/metrics as one continuous
+    run, and reading them twice does not perturb them."""
+    req = wl.serve_request(SIZES, seed=3)
+    one = Controller(req.cfg, req.states, req.pending, backend="vmap",
+                     quantum=QUANTUM)
+    one.run(max_rounds=MAX_ROUNDS, check_every=CHECK_EVERY)
+    two = Controller(req.cfg, req.states, req.pending, backend="vmap",
+                     quantum=QUANTUM)
+    two.run(max_rounds=CHECK_EVERY, check_every=CHECK_EVERY)
+    two.run(max_rounds=MAX_ROUNDS, check_every=CHECK_EVERY)
+    assert one.rounds_run == two.rounds_run
+
+    def assert_tree_equal(a, b):
+        la, ta = jax.tree.flatten(a)
+        lb, tb = jax.tree.flatten(b)
+        assert ta == tb
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    sa = one.stats()
+    assert_tree_equal(sa, two.stats())
+    assert_tree_equal(one.metrics(), two.metrics())
+    # reading is non-destructive
+    assert_tree_equal(one.stats(), sa)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_telemetry_not_double_counted_across_runs(fused):
+    """Drained events accumulate exactly once: split run == single run in
+    total event count, and a re-entered finished run drains nothing new."""
+    from repro.obs import TraceConfig
+
+    def build(obs):
+        req = wl.serve_request(SIZES, seed=3)
+        return Controller(req.cfg, req.states, req.pending, backend="vmap",
+                          quantum=QUANTUM, obs=obs)
+
+    one = build(TraceConfig(capacity=4096))
+    one.run(max_rounds=MAX_ROUNDS, check_every=CHECK_EVERY, fused=fused)
+    two = build(TraceConfig(capacity=4096))
+    two.run(max_rounds=CHECK_EVERY, check_every=CHECK_EVERY, fused=fused)
+    two.run(max_rounds=MAX_ROUNDS, check_every=CHECK_EVERY, fused=fused)
+    ea, eb = one.trace_events(), two.trace_events()
+    assert len(ea) == len(eb) > 0
+    order = list(ea.dtype.names)
+    np.testing.assert_array_equal(np.sort(ea, order=order),
+                                  np.sort(eb, order=order))
+    n = len(eb)
+    two.run(max_rounds=MAX_ROUNDS, check_every=CHECK_EVERY, fused=fused)
+    assert len(two.trace_events()) == n  # re-entry drained nothing new
+
+
+# ---------------------------------------------------------------------------
+# bugfix: greedy_generate cache padding driven by cache_specs
+
+
+def _toy_model(arch):
+    from repro.configs import get_smoke_config
+    from repro.models.model import build
+
+    cfg = get_smoke_config(arch)
+    model = build(cfg, tp=1)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_pad_to_ssm_batch_equals_seq_collision():
+    """SSM cache cells carry the BATCH axis where a KV cell keeps its
+    sequence axis; with batch == prompt_len the old ``x.shape[-3] == seq``
+    heuristic padded the batch.  The specs-driven axis map knows an SSM
+    cache has no sequence axis at all, so pad_to must be a no-op."""
+    from repro.serve.serve_step import cache_seq_axes, greedy_generate
+
+    cfg, model, params = _toy_model("falcon-mamba-7b")
+    seq = batch = 16  # the collision
+    b = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (batch, seq),
+                                      0, cfg.vocab_size)}
+    cache, _ = model.prefill(params, b)
+    assert all(a is None for a in cache_seq_axes(cfg, cache, seq, batch))
+    t_nopad = greedy_generate(model, params, b, steps=4)
+    t_pad = greedy_generate(model, params, b, steps=4, pad_to=seq + 4)
+    np.testing.assert_array_equal(np.asarray(t_nopad), np.asarray(t_pad))
+
+
+def test_pad_to_dense_finds_seq_axis_despite_collision():
+    """Dense KV cells: the sequence axis is found from the specs even when
+    batch == seq makes every axis-size heuristic ambiguous, and the
+    padding amount is inert (decode masks past ``pos``)."""
+    from repro.serve.serve_step import cache_seq_axes, greedy_generate
+
+    cfg, model, params = _toy_model("qwen3-1.7b")
+    seq = batch = 16
+    b = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (batch, seq),
+                                      0, cfg.vocab_size)}
+    cache, _ = model.prefill(params, b)
+    axes = cache_seq_axes(cfg, cache, seq, batch)
+    assert all(ax == leaf.ndim - 3
+               for ax, leaf in zip(axes, jax.tree.leaves(cache)))
+    t1 = greedy_generate(model, params, b, steps=4, pad_to=seq + 4)
+    t2 = greedy_generate(model, params, b, steps=4, pad_to=seq + 9)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_pad_to_encdec_cross_cache_stays_unpadded():
+    """The encdec cross cache is fixed-length memory (kind="decode" probes
+    at the native audio-frame length) — padding it would perturb every
+    cross-attention read.  Self caches pad, cross caches must not."""
+    import jax.numpy as jnp
+
+    from repro.serve.serve_step import cache_seq_axes, greedy_generate
+
+    cfg, model, params = _toy_model("whisper-tiny")
+    seq = batch = 16
+    key = jax.random.PRNGKey(1)
+    b = {"tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size),
+         "enc_feats": jax.random.normal(key, (batch, seq, cfg.d_model),
+                                        jnp.bfloat16)}
+    cache, _ = model.prefill(params, b)
+    axes = cache_seq_axes(cfg, cache, seq, batch)
+    # flatten order: "cross" < "self" — cross leaves first, unpadded
+    assert axes[:2] == [None, None] and None not in axes[2:]
+    t1 = greedy_generate(model, params, b, steps=4, pad_to=seq + 4)
+    t2 = greedy_generate(model, params, b, steps=4, pad_to=seq + 9)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
